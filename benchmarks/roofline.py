@@ -1,0 +1,60 @@
+"""Deliverable (g): roofline table from the dry-run JSONs.
+
+Reads results/dryrun/<tag>/<mesh>/ and emits the per-(arch x shape x mesh)
+three-term roofline with dominant bottleneck, MODEL_FLOPS/HLO_FLOPS ratio,
+and a one-line "what would move the dominant term" note."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+NOTES = {
+    ("compute",): "raise MXU utilization: fewer remat recomputes, larger microbatches",
+    ("memory", "train"): "cut HBM traffic: fuse CE/unembed, bf16 activations end-to-end, larger microbatch reuse",
+    ("memory", "prefill"): "KV/activation traffic: flash-attention kernel residency, wider q-chunks",
+    ("memory", "decode"): "weight/cache streaming bound (expected for decode): batch more requests per step",
+    ("collective", "train"): "overlap grad reduce-scatter with bwd; shard weights so all-gathers amortize across microbatches",
+    ("collective", "prefill"): "reorder TP collectives; all-gather KV once per layer",
+    ("collective", "decode"): "shrink per-token all-gathers: keep weights TP-resident",
+}
+
+
+def note_for(dominant: str, kind: str) -> str:
+    return NOTES.get((dominant, kind)) or NOTES.get((dominant,)) or ""
+
+
+def load(tag: str = "baseline", root: str = "results/dryrun"):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(root, tag, "*", "*.json"))):
+        d = json.load(open(path))
+        rows.append(d)
+    return rows
+
+
+def main(tag: str = "baseline"):
+    rows = load(tag)
+    print("mesh,arch,shape,status,dominant,compute_s,memory_s,collective_s,"
+          "bound_s,model_flops,hlo_flops_global,useful_frac,live_GiB_per_dev,note")
+    kinds = {"train_4k": "train", "prefill_32k": "prefill",
+             "decode_32k": "decode", "long_500k": "decode"}
+    for r in sorted(rows, key=lambda r: (r["mesh"], r["arch"], r["shape"])):
+        if r["status"] != "ok":
+            print(f"{r['mesh']},{r['arch']},{r['shape']},{r['status']},,,,,,,,,,"
+                  f"{r.get('reason', '')[:60]}")
+            continue
+        t = r["roofline"]
+        kind = kinds[r["shape"]]
+        print(f"{r['mesh']},{r['arch']},{r['shape']},ok,{t['dominant']},"
+              f"{t['compute_s']:.3e},{t['memory_s']:.3e},{t['collective_s']:.3e},"
+              f"{t['bound_s']:.3e},{r['model_flops']:.3e},"
+              f"{r['hlo_flops_global']:.3e},"
+              f"{(r['useful_flops_frac'] or 0):.3f},"
+              f"{r['memory']['live_bytes']/2**30:.2f},"
+              f"\"{note_for(t['dominant'], kind)}\"")
+
+
+if __name__ == "__main__":
+    import sys
+    main(sys.argv[1] if len(sys.argv) > 1 else "baseline")

@@ -1,0 +1,98 @@
+"""Benchmark driver — one section per paper table/figure + framework extras.
+
+    PYTHONPATH=src python -m benchmarks.run            # everything
+    PYTHONPATH=src python -m benchmarks.run table1     # one section
+
+Sections:
+  table1   — paper Table I (8 rows, virtual-time replay)
+  fig2     — paper Fig. 2 cost comparison
+  fig3     — paper Fig. 3 app vs transparent time
+  term     — beyond-paper: termination-ckpt window feasibility (+int8 moments)
+  micro    — microbenchmarks: checkpoint save/restore/extract throughput
+  roofline — roofline table from the dry-run JSONs (if present)
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+
+def section(name):
+    print(f"\n===== {name} =====", flush=True)
+
+
+def micro():
+    """Checkpoint-path microbenchmarks (real wall time, CPU)."""
+    import tempfile
+
+    import numpy as np
+
+    from repro.checkpoint import CheckpointStore, extract_snapshot
+
+    state = {"params": {f"w{i}": np.random.default_rng(i).standard_normal(
+        (512, 512)).astype(np.float32) for i in range(8)},
+        "step": 7}
+    nbytes = sum(a.nbytes for a in state["params"].values())
+    print("name,us_per_call,derived")
+    t0 = time.perf_counter()
+    reps = 5
+    for _ in range(reps):
+        snap = extract_snapshot(state, step=7)
+    dt = (time.perf_counter() - t0) / reps
+    print(f"extract_snapshot,{dt*1e6:.0f},{nbytes/dt/1e9:.2f}_GBps")
+    with tempfile.TemporaryDirectory() as td:
+        store = CheckpointStore(td, compress=False)
+        t0 = time.perf_counter()
+        for i in range(reps):
+            store.save(i, state)
+        dt = (time.perf_counter() - t0) / reps
+        print(f"store_save_raw,{dt*1e6:.0f},{nbytes/dt/1e9:.2f}_GBps")
+        store_z = CheckpointStore(td + "_z", compress=True)
+        t0 = time.perf_counter()
+        for i in range(reps):
+            store_z.save(i, state)
+        dt = (time.perf_counter() - t0) / reps
+        print(f"store_save_zstd,{dt*1e6:.0f},{nbytes/dt/1e9:.2f}_GBps")
+        tpl = {"params": {k: np.zeros_like(v) for k, v in state["params"].items()},
+               "step": 0}
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            store.restore(tpl)
+        dt = (time.perf_counter() - t0) / reps
+        print(f"store_restore,{dt*1e6:.0f},{nbytes/dt/1e9:.2f}_GBps")
+
+
+def main() -> None:
+    want = set(sys.argv[1:]) or {"table1", "fig2", "fig3", "term", "micro",
+                                 "roofline"}
+    if "table1" in want:
+        section("Table I: execution time under Spot-on (virtual-time replay)")
+        from . import table1
+        table1.main()
+    if "fig2" in want:
+        section("Fig 2: cost, on-demand vs checkpoint-protected spot")
+        from . import fig2_cost
+        fig2_cost.main()
+    if "fig3" in want:
+        section("Fig 3: app-native vs transparent checkpointing time")
+        from . import fig3_time
+        fig3_time.main()
+    if "term" in want:
+        section("E5: termination-checkpoint window feasibility")
+        from . import term_ckpt_window
+        term_ckpt_window.main()
+    if "micro" in want:
+        section("micro: checkpoint path throughput")
+        micro()
+    if "roofline" in want:
+        section("roofline table (from dry-run artifacts)")
+        try:
+            from . import roofline
+            roofline.main()
+        except Exception as e:  # dry-run artifacts may not exist yet
+            print(f"(skipped: {e})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Serving example: batched prefill + greedy decode with checkpointable
+serving state — Spot-on protects long-running batch-inference jobs the same
+way it protects training (the serving caches + cursor are just a pytree).
+
+    PYTHONPATH=src python examples/serve_demo.py
+"""
+
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointStore
+from repro.configs import get_smoke_config
+from repro.models import init_params
+from repro.serve.serve_step import make_decode_step, make_prefill
+
+BATCH, PROMPT_LEN, NEW_TOKENS = 4, 16, 24
+
+
+def main():
+    cfg = get_smoke_config("recurrentgemma-2b")   # hybrid: RG-LRU + local attn
+    params = init_params(cfg, jax.random.key(0))
+    prompts = jax.random.randint(jax.random.key(1), (BATCH, PROMPT_LEN),
+                                 0, cfg.vocab_size)
+
+    prefill = jax.jit(make_prefill(cfg, cache_len=PROMPT_LEN + NEW_TOKENS))
+    step = jax.jit(make_decode_step(cfg))
+
+    tok, caches, pos = prefill(params, prompts)
+    generated = [tok]
+    store = CheckpointStore(tempfile.mkdtemp(prefix="spoton_serve_"))
+    for i in range(NEW_TOKENS - 1):
+        tok, _, caches = step(params, generated[-1][:, None], caches, pos + i)
+        generated.append(tok)
+        if i == NEW_TOKENS // 2:
+            # Spot-on can snapshot mid-generation: caches are a pytree
+            serving_state = {"caches": caches, "cursor": pos + i,
+                             "generated": jnp.stack(generated, 1)}
+            info = store.save(i, serving_state, kind="transparent")
+            print(f"mid-generation checkpoint: {info.nbytes} bytes at token {i}")
+
+    out = np.asarray(jnp.stack(generated, axis=1))
+    print(f"generated {out.shape[1]} tokens for {out.shape[0]} sequences")
+    print("first sequence:", out[0].tolist())
+    assert out.shape == (BATCH, NEW_TOKENS)
+    assert (out >= 0).all() and (out < cfg.vocab_size).all()
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+"""Distributed checkpoint substrate: serialization, sharded save/restore,
+atomic store, async writer. See DESIGN.md §3."""
+
+from .async_ckpt import AsyncCheckpointer
+from .sharded import CheckpointReader, Snapshot, extract_snapshot, restore_to_template
+from .store import CheckpointInfo, CheckpointStore
+
+__all__ = [
+    "AsyncCheckpointer", "CheckpointInfo", "CheckpointReader", "CheckpointStore",
+    "Snapshot", "extract_snapshot", "restore_to_template",
+]

@@ -1,0 +1,104 @@
+"""Checkpoint manifest + atomic commit protocol.
+
+Layout of one committed checkpoint on the shared store::
+
+    <root>/step_00000042/
+        manifest.json       # global view: tensors, shard files, tree structure
+        shard_p000.spot     # per-writer (per-host) shard container(s)
+        shard_p001.spot
+        COMMITTED           # written LAST; its presence marks validity
+
+Writers stage everything in ``step_00000042.tmp-<nonce>/`` and atomically
+rename to the final name, then create COMMITTED. A reader considers a
+checkpoint restorable iff COMMITTED exists *and* the manifest parses *and*
+(optionally) every shard's crc validates. Any failure → fall back to the next
+older checkpoint: this is the paper's "search for the most recent *valid*
+checkpoint" generalized to handle partially-written or corrupted state from a
+writer killed mid-eviction.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from dataclasses import dataclass, field
+from typing import Any
+
+MANIFEST_NAME = "manifest.json"
+COMMIT_MARKER = "COMMITTED"
+STEP_PREFIX = "step_"
+
+
+def step_dirname(step: int) -> str:
+    return f"{STEP_PREFIX}{step:010d}"
+
+
+def parse_step(dirname: str) -> int | None:
+    if not dirname.startswith(STEP_PREFIX):
+        return None
+    tail = dirname[len(STEP_PREFIX):]
+    if not tail.isdigit():
+        return None
+    return int(tail)
+
+
+@dataclass
+class Manifest:
+    """Global description of one checkpoint."""
+
+    step: int
+    kind: str                      # "transparent" | "application" | "termination"
+    created_at: float
+    tensors: list[dict]            # TensorRecord JSONs with added "file" key
+    leaf_order: list[str]          # pytree leaf names in treedef order
+    treedef_repr: str              # human-readable treedef (debugging aid)
+    mesh: dict                     # {"shape": [...], "axes": [...]} at save time
+    extra: dict[str, Any] = field(default_factory=dict)  # small JSON state
+    format_version: int = 1
+
+    def to_json(self) -> dict:
+        return {
+            "format_version": self.format_version, "step": self.step,
+            "kind": self.kind, "created_at": self.created_at,
+            "tensors": self.tensors, "leaf_order": self.leaf_order,
+            "treedef_repr": self.treedef_repr, "mesh": self.mesh,
+            "extra": self.extra,
+        }
+
+    @staticmethod
+    def from_json(d: dict) -> "Manifest":
+        return Manifest(
+            step=d["step"], kind=d["kind"], created_at=d["created_at"],
+            tensors=d["tensors"], leaf_order=d["leaf_order"],
+            treedef_repr=d.get("treedef_repr", ""), mesh=d.get("mesh", {}),
+            extra=d.get("extra", {}),
+            format_version=d.get("format_version", 1),
+        )
+
+
+def write_manifest(dirpath: str, manifest: Manifest) -> None:
+    path = os.path.join(dirpath, MANIFEST_NAME)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(manifest.to_json(), f)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+
+
+def read_manifest(dirpath: str) -> Manifest:
+    with open(os.path.join(dirpath, MANIFEST_NAME)) as f:
+        return Manifest.from_json(json.load(f))
+
+
+def mark_committed(dirpath: str) -> None:
+    path = os.path.join(dirpath, COMMIT_MARKER)
+    with open(path, "w") as f:
+        f.write(f"{time.time()}\n")
+        f.flush()
+        os.fsync(f.fileno())
+
+
+def is_committed(dirpath: str) -> bool:
+    return os.path.exists(os.path.join(dirpath, COMMIT_MARKER))

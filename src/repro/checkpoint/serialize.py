@@ -1,0 +1,267 @@
+"""Tensor (de)serialization for Spot-on checkpoints.
+
+A checkpoint shard file is a self-describing container:
+
+    MAGIC | u32 header_len | header JSON (utf-8) | payload
+
+The header lists every tensor stored in the file with its name (pytree key
+path), dtype, local shape, global shape, the global index (slice) this piece
+covers, byte offset/length into the payload, a crc32 checksum, and optional
+codec ("zstd" per-tensor compression, "int8" absmax quantization for optimizer
+moments).  Per-tensor compression keeps partial reads cheap: an elastic
+restore that needs one tensor's bytes never decompresses the whole file.
+
+bfloat16 (and other ml_dtypes extended types) round-trip via dtype-name lookup
+rather than numpy's descr machinery, which cannot serialize custom dtypes.
+"""
+
+from __future__ import annotations
+
+import io
+import json
+import struct
+import zlib
+from dataclasses import dataclass, field
+from typing import Any, Callable, Iterable, Sequence
+
+import numpy as np
+import zstandard
+
+import jax
+import jax.numpy as jnp
+import ml_dtypes  # ships with jax
+
+MAGIC = b"SPOTON1\n"
+_U32 = struct.Struct("<I")
+
+# dtype registry covering numpy natives + ml_dtypes extensions used by JAX.
+_EXTENDED_DTYPES = {
+    "bfloat16": ml_dtypes.bfloat16,
+    "float8_e4m3fn": ml_dtypes.float8_e4m3fn,
+    "float8_e5m2": ml_dtypes.float8_e5m2,
+}
+
+
+def dtype_to_name(dtype) -> str:
+    return np.dtype(dtype).name
+
+
+def name_to_dtype(name: str) -> np.dtype:
+    if name in _EXTENDED_DTYPES:
+        return np.dtype(_EXTENDED_DTYPES[name])
+    return np.dtype(name)
+
+
+@dataclass
+class TensorRecord:
+    """Metadata for one stored tensor piece."""
+
+    name: str
+    dtype: str                    # logical dtype (pre-quantization)
+    shape: tuple[int, ...]        # local (stored piece) shape
+    global_shape: tuple[int, ...]
+    index: tuple[tuple[int, int], ...]  # [start, stop) per dim, global coords
+    offset: int = 0
+    nbytes: int = 0
+    crc32: int = 0
+    codec: str = "raw"            # raw | zstd | int8 | int8+zstd
+    scale: float | None = None    # absmax scale for int8 codec
+
+    def to_json(self) -> dict:
+        d = {
+            "name": self.name, "dtype": self.dtype, "shape": list(self.shape),
+            "global_shape": list(self.global_shape),
+            "index": [list(p) for p in self.index],
+            "offset": self.offset, "nbytes": self.nbytes, "crc32": self.crc32,
+            "codec": self.codec,
+        }
+        if self.scale is not None:
+            d["scale"] = self.scale
+        return d
+
+    @staticmethod
+    def from_json(d: dict) -> "TensorRecord":
+        return TensorRecord(
+            name=d["name"], dtype=d["dtype"], shape=tuple(d["shape"]),
+            global_shape=tuple(d["global_shape"]),
+            index=tuple(tuple(p) for p in d["index"]),
+            offset=d["offset"], nbytes=d["nbytes"], crc32=d["crc32"],
+            codec=d.get("codec", "raw"), scale=d.get("scale"),
+        )
+
+
+# ---------------------------------------------------------------------------
+# pytree <-> named leaves
+# ---------------------------------------------------------------------------
+
+def _key_str(path) -> str:
+    """Stable, filesystem-free name for a pytree key path."""
+    parts = []
+    for k in path:
+        if isinstance(k, jax.tree_util.DictKey):
+            parts.append(str(k.key))
+        elif isinstance(k, jax.tree_util.SequenceKey):
+            parts.append(str(k.idx))
+        elif isinstance(k, jax.tree_util.GetAttrKey):
+            parts.append(str(k.name))
+        else:  # pragma: no cover - future key kinds
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def flatten_state(tree) -> dict[str, Any]:
+    """Flatten a pytree into {keypath: leaf}. Leaves may be jax/np arrays or scalars."""
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in leaves:
+        name = _key_str(path)
+        if name in out:
+            raise ValueError(f"duplicate leaf name {name!r}")
+        out[name] = leaf
+    return out
+
+
+def tree_structure_of(tree):
+    return jax.tree_util.tree_structure(tree)
+
+
+def unflatten_state(treedef, named: dict[str, Any], order: Sequence[str]):
+    return jax.tree_util.tree_unflatten(treedef, [named[n] for n in order])
+
+
+def to_host(leaf) -> np.ndarray:
+    """Device/py leaf -> numpy array (blocking device->host copy for jax.Array)."""
+    if isinstance(leaf, jax.Array):
+        return np.asarray(leaf)
+    if isinstance(leaf, np.ndarray):
+        return leaf
+    return np.asarray(leaf)
+
+
+# ---------------------------------------------------------------------------
+# codecs
+# ---------------------------------------------------------------------------
+
+def _encode(arr: np.ndarray, codec: str) -> tuple[bytes, float | None]:
+    scale = None
+    if codec.startswith("int8"):
+        absmax = float(np.max(np.abs(arr.astype(np.float32)))) if arr.size else 0.0
+        scale = absmax / 127.0 if absmax > 0 else 1.0
+        q = np.clip(np.round(arr.astype(np.float32) / scale), -127, 127).astype(np.int8)
+        raw = q.tobytes()
+    else:
+        raw = np.ascontiguousarray(arr).tobytes()
+    if codec.endswith("zstd"):
+        raw = zstandard.ZstdCompressor(level=3).compress(raw)
+    return raw, scale
+
+
+def _decode(buf: bytes, rec: TensorRecord) -> np.ndarray:
+    if rec.codec.endswith("zstd"):
+        buf = zstandard.ZstdDecompressor().decompress(buf)
+    if rec.codec.startswith("int8"):
+        q = np.frombuffer(buf, dtype=np.int8).reshape(rec.shape)
+        return (q.astype(np.float32) * rec.scale).astype(name_to_dtype(rec.dtype))
+    return np.frombuffer(buf, dtype=name_to_dtype(rec.dtype)).reshape(rec.shape).copy()
+
+
+# ---------------------------------------------------------------------------
+# shard file writer / reader
+# ---------------------------------------------------------------------------
+
+@dataclass
+class PendingTensor:
+    record: TensorRecord
+    payload: bytes
+
+
+def encode_tensor(
+    name: str,
+    arr: np.ndarray,
+    *,
+    global_shape: tuple[int, ...] | None = None,
+    index: tuple[tuple[int, int], ...] | None = None,
+    codec: str = "raw",
+) -> PendingTensor:
+    arr = np.asarray(arr)
+    gshape = tuple(global_shape if global_shape is not None else arr.shape)
+    idx = tuple(index if index is not None else tuple((0, s) for s in arr.shape))
+    payload, scale = _encode(arr, codec)
+    rec = TensorRecord(
+        name=name, dtype=dtype_to_name(arr.dtype), shape=tuple(arr.shape),
+        global_shape=gshape, index=idx, nbytes=len(payload),
+        crc32=zlib.crc32(payload), codec=codec, scale=scale,
+    )
+    return PendingTensor(rec, payload)
+
+
+def write_shard_file(path, tensors: Iterable[PendingTensor]) -> list[TensorRecord]:
+    """Write a shard container; returns finalized records (offsets filled)."""
+    tensors = list(tensors)
+    offset = 0
+    records = []
+    for t in tensors:
+        t.record.offset = offset
+        offset += t.record.nbytes
+        records.append(t.record)
+    header = json.dumps({"tensors": [r.to_json() for r in records]}).encode()
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(_U32.pack(len(header)))
+        f.write(header)
+        for t in tensors:
+            f.write(t.payload)
+        f.flush()
+        import os
+        os.fsync(f.fileno())
+    return records
+
+
+class ShardFileReader:
+    """Random access into a shard container; validates crc per read."""
+
+    def __init__(self, path):
+        self.path = path
+        with open(path, "rb") as f:
+            magic = f.read(len(MAGIC))
+            if magic != MAGIC:
+                raise ValueError(f"{path}: bad magic {magic!r}")
+            (hlen,) = _U32.unpack(f.read(4))
+            header = json.loads(f.read(hlen).decode())
+            self._payload_start = len(MAGIC) + 4 + hlen
+        self.records = {r["name"]: TensorRecord.from_json(r) for r in header["tensors"]}
+
+    def names(self) -> list[str]:
+        return list(self.records)
+
+    def read(self, name: str) -> np.ndarray:
+        rec = self.records[name]
+        with open(self.path, "rb") as f:
+            f.seek(self._payload_start + rec.offset)
+            buf = f.read(rec.nbytes)
+        if zlib.crc32(buf) != rec.crc32:
+            raise IOError(f"{self.path}:{name}: crc mismatch (corrupt shard)")
+        return _decode(buf, rec)
+
+    def validate(self) -> None:
+        for name in self.records:
+            self.read(name)
+
+
+def default_codec_for(name: str, arr: np.ndarray, *, compress: bool,
+                      quantize_moments: bool) -> str:
+    """Checkpoint codec policy.
+
+    Optimizer moments (``opt_state/.../mu|nu``) may be int8-quantized — a
+    beyond-paper optimization that shrinks termination checkpoints so they fit
+    inside the eviction-notice window. Params and scalars stay exact.
+    """
+    is_moment = ("/mu/" in f"/{name}/" or name.endswith("/mu")
+                 or "/nu/" in f"/{name}/" or name.endswith("/nu"))
+    floaty = np.issubdtype(np.asarray(arr).dtype, np.floating) or \
+        np.asarray(arr).dtype == np.dtype(ml_dtypes.bfloat16)
+    if quantize_moments and is_moment and floaty and np.asarray(arr).ndim >= 1:
+        return "int8+zstd" if compress else "int8"
+    if compress and np.asarray(arr).nbytes >= 1024:
+        return "zstd"
+    return "raw"

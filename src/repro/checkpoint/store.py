@@ -1,0 +1,174 @@
+"""CheckpointStore — atomic commit, latest-valid search, retention GC.
+
+The store models the paper's shared NFS volume: every instance (host) mounts
+the same ``root``. Its invariants:
+
+* **Atomicity** — a checkpoint is either fully committed (COMMITTED marker
+  present, manifest + shards complete) or invisible to readers. Staging dir +
+  rename + marker-last ordering guarantees this even if the writer is killed
+  mid-eviction (the paper's "opportunistic" termination checkpoint).
+* **Latest-valid search** — restore scans committed steps newest-first and
+  returns the first that passes validation, exactly the coordinator behaviour
+  in the paper ("automatically searches for the most recent valid checkpoint").
+* **Retention** — keep the newest K committed checkpoints (bounded NFS bill;
+  the cost model charges provisioned bytes).
+"""
+
+from __future__ import annotations
+
+import os
+import shutil
+import time
+import uuid
+from dataclasses import dataclass
+from typing import Any, Callable
+
+from . import manifest as mf
+from . import sharded
+
+
+@dataclass
+class CheckpointInfo:
+    step: int
+    path: str
+    kind: str
+    nbytes: int
+    elapsed_s: float
+
+
+class CheckpointStore:
+    def __init__(
+        self,
+        root: str,
+        *,
+        retention: int = 3,
+        validate_on_restore: bool = False,
+        compress: bool = True,
+        quantize_moments: bool = False,
+        time_fn: Callable[[], float] = time.time,
+        fault_injector: Callable[[str], None] | None = None,
+    ):
+        self.root = root
+        self.retention = retention
+        self.validate_on_restore = validate_on_restore
+        self.compress = compress
+        self.quantize_moments = quantize_moments
+        self.time_fn = time_fn
+        # test hook: called between commit phases; raising simulates a writer
+        # killed mid-eviction at that phase.
+        self.fault_injector = fault_injector or (lambda phase: None)
+        os.makedirs(root, exist_ok=True)
+
+    # -- write ---------------------------------------------------------------
+
+    def save_snapshot(self, snapshot: sharded.Snapshot, *, kind: str = "transparent",
+                      extra: dict | None = None) -> CheckpointInfo:
+        t0 = self.time_fn()
+        final = os.path.join(self.root, mf.step_dirname(snapshot.step))
+        stage = final + f".tmp-{uuid.uuid4().hex[:8]}"
+        os.makedirs(stage, exist_ok=True)
+        try:
+            records = sharded.write_snapshot(
+                stage, snapshot, compress=self.compress,
+                quantize_moments=self.quantize_moments)
+            self.fault_injector("shards_written")
+            man = mf.Manifest(
+                step=snapshot.step, kind=kind, created_at=self.time_fn(),
+                tensors=records, leaf_order=snapshot.leaf_order,
+                treedef_repr=snapshot.treedef_repr, mesh=snapshot.mesh,
+                extra=extra or {})
+            mf.write_manifest(stage, man)
+            self.fault_injector("manifest_written")
+            if os.path.exists(final):  # re-save of same step: replace
+                shutil.rmtree(final)
+            os.replace(stage, final)
+            self.fault_injector("renamed")
+            mf.mark_committed(final)
+        except BaseException:
+            # leave staging dir for post-mortem; it is invisible to readers
+            raise
+        nbytes = sum(r["nbytes"] for r in records)
+        info = CheckpointInfo(step=snapshot.step, path=final, kind=kind,
+                              nbytes=nbytes, elapsed_s=self.time_fn() - t0)
+        self.gc()
+        return info
+
+    def save(self, step: int, state, *, kind: str = "transparent",
+             mesh_info: dict | None = None, extra: dict | None = None) -> CheckpointInfo:
+        """Synchronous convenience: extract + write + commit."""
+        snap = sharded.extract_snapshot(state, step=step, mesh_info=mesh_info)
+        return self.save_snapshot(snap, kind=kind, extra=extra)
+
+    # -- read ----------------------------------------------------------------
+
+    def committed_steps(self) -> list[int]:
+        steps = []
+        try:
+            entries = os.listdir(self.root)
+        except FileNotFoundError:
+            return []
+        for d in entries:
+            step = mf.parse_step(d)
+            if step is None:
+                continue
+            if mf.is_committed(os.path.join(self.root, d)):
+                steps.append(step)
+        return sorted(steps)
+
+    def _try_open(self, step: int, *, validate: bool) -> tuple[mf.Manifest, sharded.CheckpointReader] | None:
+        path = os.path.join(self.root, mf.step_dirname(step))
+        try:
+            man = mf.read_manifest(path)
+            reader = sharded.CheckpointReader(path, man.tensors)
+            if validate:
+                reader.validate()
+            return man, reader
+        except Exception:
+            return None
+
+    def latest_valid(self, *, max_step: int | None = None) -> tuple[mf.Manifest, sharded.CheckpointReader] | None:
+        """Newest committed checkpoint that parses (and validates); else older."""
+        for step in reversed(self.committed_steps()):
+            if max_step is not None and step > max_step:
+                continue
+            opened = self._try_open(step, validate=self.validate_on_restore)
+            if opened is not None:
+                return opened
+        return None
+
+    def restore(self, template, *, step: int | None = None):
+        """Restore into `template`'s structure/shardings. Returns (state, manifest)."""
+        if step is not None:
+            opened = self._try_open(step, validate=self.validate_on_restore)
+        else:
+            opened = self.latest_valid()
+        if opened is None:
+            raise FileNotFoundError(f"no valid checkpoint under {self.root}")
+        man, reader = opened
+        state = sharded.restore_to_template(reader, template)
+        return state, man
+
+    # -- maintenance -----------------------------------------------------------
+
+    def gc(self) -> list[int]:
+        """Keep the newest `retention` committed checkpoints; drop the rest."""
+        steps = self.committed_steps()
+        doomed = steps[:-self.retention] if self.retention > 0 else []
+        for step in doomed:
+            shutil.rmtree(os.path.join(self.root, mf.step_dirname(step)),
+                          ignore_errors=True)
+        # also sweep dead staging dirs older than nothing-in-particular:
+        for d in os.listdir(self.root):
+            if ".tmp-" in d:
+                shutil.rmtree(os.path.join(self.root, d), ignore_errors=True)
+        return doomed
+
+    def total_bytes(self) -> int:
+        total = 0
+        for dirpath, _, files in os.walk(self.root):
+            for f in files:
+                try:
+                    total += os.path.getsize(os.path.join(dirpath, f))
+                except OSError:
+                    pass
+        return total

@@ -1,0 +1,22 @@
+"""The paper's primary contribution: the Spot-on checkpoint coordinator,
+spot-instance simulation, pricing, and elastic restore. See DESIGN.md §1–2."""
+
+from .clock import Clock, VirtualClock, WallClock
+from .coordinator import (CoordinatorStats, Signal, SpotOnCoordinator,
+                          StragglerDetector, TimeModel)
+from .cost import AZURE_D8S_V3, TPU_V5E_CHIP, CostAccountant, PriceSheet
+from .events import (DEFAULT_NOTICE_S, PREEMPT, ScheduledEvent,
+                     SimulatedMetadataService, first_preempt)
+from .policy import CheckpointPolicy, Mode
+from .spot_sim import (EvictionSchedule, NoEviction, PeriodicEviction,
+                       PoissonEviction, ScaleSet, SpotInstance, TraceEviction)
+
+__all__ = [
+    "AZURE_D8S_V3", "TPU_V5E_CHIP", "Clock", "CheckpointPolicy",
+    "CoordinatorStats", "CostAccountant", "DEFAULT_NOTICE_S",
+    "EvictionSchedule", "Mode", "NoEviction", "PREEMPT", "PeriodicEviction",
+    "PoissonEviction", "PriceSheet", "ScaleSet", "ScheduledEvent", "Signal",
+    "SimulatedMetadataService", "SpotInstance", "SpotOnCoordinator",
+    "StragglerDetector", "TimeModel", "TraceEviction", "VirtualClock",
+    "WallClock", "first_preempt",
+]

@@ -1,0 +1,276 @@
+"""SpotOnCoordinator — the paper's checkpoint coordinator (Fig. 1).
+
+Runs beside the workload (in-process here; a sidecar in the paper), and owns:
+
+* scheduling **periodic checkpoints** (transparent mode),
+* polling the metadata service and, on a ``Preempt`` event, taking an
+  opportunistic **termination checkpoint** (transparent mode only — the
+  application-specific mode *cannot checkpoint on demand*, per the paper),
+* on restart, finding the **most recent valid checkpoint** and restoring,
+* (beyond paper, needed at 1000-node scale) a **straggler policy** that turns a
+  persistently slow instance into a voluntary eviction: checkpoint + replace.
+
+Time accounting: when a ``TimeModel`` is given (virtual-time benchmarks), the
+coordinator charges modeled durations to the clock — extract cost for async
+periodic saves (write IO overlaps training), extract+write for blocking
+termination / stage checkpoints, read cost for restores. In wall-clock mode
+durations are charged by physics.
+"""
+
+from __future__ import annotations
+
+import enum
+import logging
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+from ..checkpoint.async_ckpt import AsyncCheckpointer
+from ..checkpoint.sharded import Snapshot, extract_snapshot
+from ..checkpoint.store import CheckpointStore
+from .clock import Clock, VirtualClock
+from .events import first_preempt, MetadataService
+from .policy import CheckpointPolicy, Mode
+
+log = logging.getLogger("spoton")
+
+
+class Signal(enum.Enum):
+    CONTINUE = "continue"
+    PREEMPTING = "preempting"   # stop cleanly before NotBefore
+    STRAGGLER = "straggler"     # ask the pool for a replacement
+
+
+@dataclass(frozen=True)
+class TimeModel:
+    """Virtual-time cost of checkpoint operations, by bytes moved."""
+
+    extract_bw: float = 10e9     # device->host snapshot bandwidth
+    write_bw: float = 0.5e9      # shared-NFS write bandwidth
+    read_bw: float = 1.0e9       # shared-NFS read bandwidth
+    latency_s: float = 2.0       # per-op fixed cost (mount, metadata, commit)
+
+    def extract_s(self, nbytes: int) -> float:
+        return nbytes / self.extract_bw
+
+    def write_s(self, nbytes: int) -> float:
+        return self.latency_s + nbytes / self.write_bw
+
+    def read_s(self, nbytes: int) -> float:
+        return self.latency_s + nbytes / self.read_bw
+
+
+class StragglerDetector:
+    """Flags an instance whose step time stays above factor×rolling-median."""
+
+    def __init__(self, factor: float = 2.0, window: int = 50,
+                 min_samples: int = 20, patience: int = 5):
+        self.factor = factor
+        self.window: deque[float] = deque(maxlen=window)
+        self.min_samples = min_samples
+        self.patience = patience
+        self._slow_streak = 0
+
+    def observe(self, step_duration_s: float) -> bool:
+        if len(self.window) >= self.min_samples:
+            median = sorted(self.window)[len(self.window) // 2]
+            if step_duration_s > self.factor * median:
+                self._slow_streak += 1
+            else:
+                self._slow_streak = 0
+        self.window.append(step_duration_s)
+        return self._slow_streak >= self.patience
+
+    def reset(self) -> None:
+        self._slow_streak = 0
+        self.window.clear()
+
+
+@dataclass
+class CoordinatorStats:
+    periodic_ckpts: int = 0
+    termination_ckpts: int = 0
+    termination_failures: int = 0
+    stage_ckpts: int = 0
+    restores: int = 0
+    ckpt_bytes_written: int = 0
+    ckpt_time_s: float = 0.0
+    restore_time_s: float = 0.0
+
+
+class SpotOnCoordinator:
+    def __init__(
+        self,
+        store: CheckpointStore,
+        policy: CheckpointPolicy,
+        clock: Clock,
+        *,
+        mesh_info: dict | None = None,
+        time_model: TimeModel | None = None,
+        straggler: StragglerDetector | None = None,
+    ):
+        self.store = store
+        self.policy = policy
+        self.clock = clock
+        self.mesh_info = mesh_info or {}
+        self.time_model = time_model
+        self.straggler = straggler
+        self.stats = CoordinatorStats()
+        self._async = AsyncCheckpointer(store) if policy.async_writes else None
+        self._metadata: MetadataService | None = None
+        self._instance_name: str | None = None
+        self._last_periodic_at = clock.now()
+        self._preempt_handled: set[str] = set()
+        self._last_poll_at = -float("inf")
+
+    # -- lifecycle --------------------------------------------------------------
+
+    def attach_instance(self, metadata: MetadataService, name: str) -> None:
+        """Bind to the (new) instance's metadata endpoint after (re)start."""
+        self._metadata = metadata
+        self._instance_name = name
+        self._last_periodic_at = self.clock.now()
+        if self.straggler is not None:
+            self.straggler.reset()
+
+    def detach(self) -> None:
+        self._metadata = None
+        self._instance_name = None
+
+    # -- time accounting ---------------------------------------------------------
+
+    def _charge(self, seconds: float) -> None:
+        if self.time_model is not None and isinstance(self.clock, VirtualClock):
+            self.clock.advance(seconds)
+
+    # -- checkpoint actions --------------------------------------------------------
+
+    def _save_periodic(self, step: int, state) -> None:
+        t0 = self.clock.now()
+        if self._async is not None:
+            snap = self._async.save_async(step, state, kind="transparent",
+                                          mesh_info=self.mesh_info)
+        else:
+            snap = extract_snapshot(state, step=step, mesh_info=self.mesh_info)
+            self.store.save_snapshot(snap, kind="transparent")
+        # async: trainer pays only the device->host extract; write overlaps
+        cost = (self.time_model.extract_s(snap.nbytes) if self._async is not None
+                else self.time_model.extract_s(snap.nbytes) + self.time_model.write_s(snap.nbytes)) \
+            if self.time_model else 0.0
+        self._charge(cost)
+        self.stats.periodic_ckpts += 1
+        self.stats.ckpt_bytes_written += snap.nbytes
+        self.stats.ckpt_time_s += (self.clock.now() - t0)
+        self._last_periodic_at = self.clock.now()
+
+    def _save_termination(self, step: int, state, deadline: float) -> bool:
+        """Opportunistic: returns False if the notice window was missed."""
+        t0 = self.clock.now()
+        budget = deadline - t0
+        if budget <= 0:
+            self.stats.termination_failures += 1
+            return False
+        try:
+            if self._async is not None:
+                info = self._async.save_urgent(step, state, mesh_info=self.mesh_info,
+                                               timeout_s=max(budget, 0.1))
+                nbytes = info.nbytes
+            else:
+                snap = extract_snapshot(state, step=step, mesh_info=self.mesh_info)
+                info = self.store.save_snapshot(snap, kind="termination")
+                nbytes = snap.nbytes
+        except (TimeoutError, RuntimeError) as e:
+            log.warning("termination checkpoint failed: %s", e)
+            self.stats.termination_failures += 1
+            return False
+        cost = (self.time_model.extract_s(nbytes) + self.time_model.write_s(nbytes)) \
+            if self.time_model else 0.0
+        if self.time_model and cost > budget:
+            # virtual-time world: the write would not have finished in time
+            self._charge(budget)
+            self.stats.termination_failures += 1
+            return False
+        self._charge(cost)
+        self.stats.termination_ckpts += 1
+        self.stats.ckpt_bytes_written += nbytes
+        self.stats.ckpt_time_s += (self.clock.now() - t0)
+        return True
+
+    def on_stage_end(self, stage: int, step: int, state) -> None:
+        """Application-specific checkpoint point (k-mer stage boundary)."""
+        if not self.policy.stage_boundary_enabled:
+            return
+        t0 = self.clock.now()
+        snap = extract_snapshot(state, step=step, mesh_info=self.mesh_info)
+        self.store.save_snapshot(snap, kind="application",
+                                 extra={"stage": stage})
+        # app-specific saves are synchronous in the app's critical path
+        self._charge(self.time_model.extract_s(snap.nbytes)
+                     + self.time_model.write_s(snap.nbytes)
+                     if self.time_model else 0.0)
+        self.stats.stage_ckpts += 1
+        self.stats.ckpt_bytes_written += snap.nbytes
+        self.stats.ckpt_time_s += (self.clock.now() - t0)
+
+    # -- the per-step hook ----------------------------------------------------------
+
+    def on_step_end(self, step: int, state_provider: Callable[[], Any],
+                    step_duration_s: float | None = None) -> Signal:
+        now = self.clock.now()
+        # 1. metadata poll (rate-limited like the paper's curl loop)
+        preempt = None
+        if self._metadata is not None and now - self._last_poll_at >= self.policy.poll_interval_s:
+            self._last_poll_at = now
+            doc = self._metadata.get_scheduled_events()
+            preempt = first_preempt(doc, self._instance_name)
+            if preempt is not None and preempt["EventId"] in self._preempt_handled:
+                preempt = None
+        # 2. eviction imminent
+        if preempt is not None:
+            self._preempt_handled.add(preempt["EventId"])
+            log.info("Preempt notice for %s (NotBefore=%s)",
+                     self._instance_name, preempt["NotBefore"])
+            if self.policy.supports_on_demand:
+                self._save_termination(step, state_provider(),
+                                       deadline=float(preempt["NotBefore"]))
+            # app-specific mode cannot act (paper semantics) — work since the
+            # last stage boundary will be lost.
+            self._metadata.acknowledge_event(preempt["EventId"])
+            return Signal.PREEMPTING
+        # 3. periodic checkpoint
+        if (self.policy.periodic_enabled
+                and now - self._last_periodic_at >= self.policy.periodic_interval_s):
+            self._save_periodic(step, state_provider())
+        # 4. straggler policy
+        if (self.straggler is not None and step_duration_s is not None
+                and self.straggler.observe(step_duration_s)):
+            log.warning("instance %s flagged as straggler", self._instance_name)
+            if self.policy.supports_on_demand:
+                self._save_termination(step, state_provider(),
+                                       deadline=self.clock.now() + 3600.0)
+            return Signal.STRAGGLER
+        return Signal.CONTINUE
+
+    # -- restart ----------------------------------------------------------------------
+
+    def restore_latest(self, template):
+        """Most-recent-valid restore; returns (state, manifest) or None."""
+        t0 = self.clock.now()
+        try:
+            state, man = self.store.restore(template)
+        except FileNotFoundError:
+            return None
+        nbytes = sum(t["nbytes"] for t in man.tensors)
+        self._charge(self.time_model.read_s(nbytes) if self.time_model else 0.0)
+        self.stats.restores += 1
+        self.stats.restore_time_s += (self.clock.now() - t0)
+        return state, man
+
+    def flush(self) -> None:
+        if self._async is not None:
+            self._async.wait_until_finished()
+
+    def close(self) -> None:
+        if self._async is not None:
+            self._async.close()
+            self._async = None

@@ -1,0 +1,52 @@
+"""Elastic restore — resume a checkpoint on a different topology.
+
+The paper restarts on "a new instance" of the same VM size. At pod scale the
+replacement capacity may be *smaller* (a pod is gone) or differently shaped;
+because manifests store global shapes and per-piece indices (checkpoint/
+sharded.py), restoring under any mesh is just re-slicing. This module adds the
+policy layer: pick a mesh for the devices that are left, rebuild the template
+with the new shardings, and hand back a state the train step can jit against.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+from jax.sharding import Mesh
+
+from ..checkpoint.store import CheckpointStore
+
+
+@dataclass(frozen=True)
+class MeshPlan:
+    shape: tuple[int, ...]
+    axes: tuple[str, ...]
+
+    def build(self, devices=None) -> Mesh:
+        devices = devices if devices is not None else jax.devices()
+        n = 1
+        for s in self.shape:
+            n *= s
+        if len(devices) < n:
+            raise ValueError(f"need {n} devices, have {len(devices)}")
+        import numpy as np
+        return Mesh(np.asarray(devices[:n]).reshape(self.shape), self.axes)
+
+
+def plan_mesh_for(n_devices: int, *, model_parallel: int, axes=("data", "model")) -> MeshPlan:
+    """Largest (data, model) mesh for the surviving device count, preserving
+    the model-parallel degree (param shards must still fit one instance)."""
+    if n_devices % model_parallel != 0:
+        raise ValueError(f"{n_devices} devices not divisible by model={model_parallel}")
+    return MeshPlan((n_devices // model_parallel, model_parallel), tuple(axes))
+
+
+def elastic_restore(store: CheckpointStore, template_fn, mesh: Mesh):
+    """Restore the latest valid checkpoint onto `mesh`.
+
+    `template_fn(mesh) -> state-template` rebuilds ShapeDtypeStructs with the
+    new mesh's shardings (global shapes are mesh-independent by construction).
+    """
+    template = template_fn(mesh)
+    return store.restore(template)

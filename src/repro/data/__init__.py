@@ -1,0 +1,3 @@
+from .pipeline import PipelineState, TokenPipeline
+
+__all__ = ["PipelineState", "TokenPipeline"]

@@ -1,0 +1,5 @@
+from .sharding import (ShardingRules, batch_spec, cache_shardings, shard_act,
+                       tree_shardings, use_sharding_rules)
+
+__all__ = ["ShardingRules", "batch_spec", "cache_shardings", "shard_act",
+           "tree_shardings", "use_sharding_rules"]

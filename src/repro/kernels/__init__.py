@@ -1,0 +1,20 @@
+"""Pallas TPU kernels for the workload's compute hot spots (the paper itself
+contributes no kernels — these belong to the substrate being checkpointed).
+
+Each subpackage: <name>.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+wrapper), ref.py (pure-jnp oracle). Validated in interpret=True on CPU;
+TPU is the compile target. The model's XLA paths (models/layers.py chunked
+attention, associative scans) implement identical semantics and serve as the
+lowering path on non-TPU backends; on TPU, ops here are the drop-in hot path.
+"""
+
+from .decode_attention import decode_attention_ref, flash_decode
+from .flash_attention import attention_ref, flash_attention
+from .rglru_scan import lru_scan, rglru_scan, rglru_scan_ref
+from .ssm_scan import selective_scan, ssm_scan, ssm_scan_ref
+
+__all__ = [
+    "attention_ref", "decode_attention_ref", "flash_attention", "flash_decode",
+    "lru_scan", "rglru_scan", "rglru_scan_ref", "selective_scan", "ssm_scan",
+    "ssm_scan_ref",
+]

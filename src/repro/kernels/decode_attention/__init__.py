@@ -1,0 +1,4 @@
+from .ops import flash_decode
+from .ref import decode_attention_ref
+
+__all__ = ["flash_decode", "decode_attention_ref"]

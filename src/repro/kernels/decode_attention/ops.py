@@ -1,0 +1,22 @@
+"""Jit-ready flash-decode wrapper (inference-only; no vjp needed)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .decode_attention import DEFAULT_BLOCK_K, decode_attention
+
+
+def flash_decode(q, k, v, valid_len, *, block_k=DEFAULT_BLOCK_K,
+                 interpret=False):
+    """q: (B,1,H,hd) or (B,H,hd); k,v: (B,S,KV,hd). Returns same rank as q."""
+    squeeze = q.ndim == 4
+    if squeeze:
+        q = q[:, 0]
+    S = k.shape[1]
+    bk = min(block_k, S)
+    while S % bk != 0:
+        bk //= 2
+    o = decode_attention(q, k, v, valid_len, block_k=max(bk, 1),
+                         interpret=interpret)
+    return o[:, None] if squeeze else o

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for flash-decode."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0 ** 30
+
+
+def decode_attention_ref(q, k, v, valid_len, *, scale=None):
+    """q: (B,H,hd); k,v: (B,S,KV,hd) -> (B,H,hd)."""
+    B, H, hd = q.shape
+    _, S, KV, _ = k.shape
+    G = H // KV
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    qg = q.reshape(B, KV, G, hd).astype(jnp.float32) * scale
+    s = jnp.einsum("bkgh,bskh->bkgs", qg, k.astype(jnp.float32))
+    mask = jnp.arange(S)[None, None, None, :] < valid_len
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskh->bkgh", p, v.astype(jnp.float32))
+    return o.reshape(B, H, hd).astype(q.dtype)

@@ -1,0 +1,80 @@
+"""Jit-ready wrapper: differentiable flash attention (custom_vjp) with
+sequence padding to block multiples. The TPU kernels run with interpret=True
+on CPU (tests) and natively on TPU."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import (DEFAULT_BLOCK_K, DEFAULT_BLOCK_Q,
+                              flash_attention_bwd, flash_attention_fwd)
+
+
+def _pad_to(x, size, axis):
+    pad = size - x.shape[axis]
+    if pad <= 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def flash_attention(q, k, v, causal=True, window=0, block_q=DEFAULT_BLOCK_Q,
+                    block_k=DEFAULT_BLOCK_K, interpret=False):
+    o, _ = _fwd(q, k, v, causal, window, block_q, block_k, interpret)
+    return o
+
+
+def _fwd(q, k, v, causal, window, block_q, block_k, interpret):
+    B, Sq, H, hd = q.shape
+    Skv = k.shape[1]
+    bq = min(block_q, Sq)
+    bk = min(block_k, Skv)
+    Sq_p = -(-Sq // bq) * bq
+    Skv_p = -(-Skv // bk) * bk
+    qp = _pad_to(q, Sq_p, 1)
+    kp = _pad_to(k, Skv_p, 1)
+    vp = _pad_to(v, Skv_p, 1)
+    # padded KV columns are masked by causality only if they sit beyond every
+    # real q row; enforce explicitly via window-free causal + kv mask trick:
+    # give padded keys position > everything by relying on causal mask when
+    # Skv_p > Sq rows exist. Safest: mask via big-negative bias is already
+    # implied because padded k rows are zeros -> s=0, which is NOT masked;
+    # so we shift padded q positions instead (they are sliced off) and rely on
+    # causal>=, requiring Skv padding only when causal. For non-causal use,
+    # callers must pass block-aligned Skv.
+    if Skv_p != Skv:
+        assert causal, "non-causal padding unsupported; align Skv to block_k"
+        assert Skv == Sq, "padded flash path assumes self-attention"
+    o, lse = flash_attention_fwd(qp, kp, vp, causal=causal, window=window,
+                                 block_q=bq, block_k=bk, interpret=interpret)
+    return o[:, :Sq], (q, k, v, o[:, :Sq], lse[..., :Sq])
+
+
+def _fwd_vjp(q, k, v, causal, window, block_q, block_k, interpret):
+    o, res = _fwd(q, k, v, causal, window, block_q, block_k, interpret)
+    return o, res
+
+
+def _bwd_vjp(causal, window, block_q, block_k, interpret, res, do):
+    q, k, v, o, lse = res
+    B, Sq, H, hd = q.shape
+    Skv = k.shape[1]
+    bq = min(block_q, Sq)
+    bk = min(block_k, Skv)
+    Sq_p = -(-Sq // bq) * bq
+    Skv_p = -(-Skv // bk) * bk
+    qp, op, dop = (_pad_to(x, Sq_p, 1) for x in (q, o, do))
+    kp, vp = (_pad_to(x, Skv_p, 1) for x in (k, v))
+    lsep = _pad_to(lse, Sq_p, 2)
+    dq, dk, dv = flash_attention_bwd(qp, kp, vp, op, lsep, dop, causal=causal,
+                                     window=window, block_q=bq, block_k=bk,
+                                     interpret=interpret)
+    return dq[:, :Sq], dk[:, :Skv], dv[:, :Skv]
+
+
+flash_attention.defvjp(_fwd_vjp, _bwd_vjp)

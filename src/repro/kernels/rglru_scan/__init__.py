@@ -1,0 +1,5 @@
+from .ops import lru_scan
+from .ref import rglru_scan_ref
+from .rglru_scan import rglru_scan
+
+__all__ = ["lru_scan", "rglru_scan", "rglru_scan_ref"]

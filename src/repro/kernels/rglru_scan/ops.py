@@ -1,0 +1,31 @@
+"""Jit-ready RG-LRU scan wrapper; gradients via the jnp reference."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .ref import rglru_scan_ref
+from .rglru_scan import DEFAULT_BLOCK_W, DEFAULT_CHUNK, rglru_scan
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def lru_scan(a, b, block_w=DEFAULT_BLOCK_W, chunk=DEFAULT_CHUNK,
+             interpret=False):
+    y, _ = rglru_scan(a, b, block_w=block_w, chunk=chunk, interpret=interpret)
+    return y
+
+
+def _fwd(a, b, block_w, chunk, interpret):
+    y, _ = rglru_scan(a, b, block_w=block_w, chunk=chunk, interpret=interpret)
+    return y, (a, b)
+
+
+def _bwd(block_w, chunk, interpret, res, dy):
+    a, b = res
+    _, vjp = jax.vjp(lambda *x: rglru_scan_ref(*x)[0], a, b)
+    return vjp(dy)
+
+
+lru_scan.defvjp(_fwd, _bwd)

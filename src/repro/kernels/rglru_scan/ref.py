@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the RG-LRU scan (sequential lax.scan)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rglru_scan_ref(a, b):
+    """a, b: (B,S,W) -> (h (B,S,W), h_last (B,W)). Sequential reference."""
+    def step(h, xs):
+        a_t, b_t = xs
+        h = a_t * h + b_t
+        return h, h
+
+    a32 = a.astype(jnp.float32).transpose(1, 0, 2)
+    b32 = b.astype(jnp.float32).transpose(1, 0, 2)
+    h0 = jnp.zeros(a32.shape[1:], jnp.float32)
+    h_last, hs = jax.lax.scan(step, h0, (a32, b32))
+    return hs.transpose(1, 0, 2).astype(a.dtype), h_last

@@ -1,0 +1,5 @@
+from .ops import selective_scan
+from .ref import ssm_scan_ref
+from .ssm_scan import ssm_scan
+
+__all__ = ["selective_scan", "ssm_scan", "ssm_scan_ref"]

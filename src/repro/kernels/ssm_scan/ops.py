@@ -1,0 +1,35 @@
+"""Jit-ready selective-scan wrapper. Forward runs the Pallas kernel; gradients
+fall back to the jnp reference via custom_vjp (the recurrence backward is the
+reference's — correctness over speed for the training path on this kernel)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .ref import ssm_scan_ref
+from .ssm_scan import DEFAULT_BLOCK_D, DEFAULT_CHUNK, ssm_scan
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6, 7, 8))
+def selective_scan(u, delta, A, B, C, D, block_d=DEFAULT_BLOCK_D,
+                   chunk=DEFAULT_CHUNK, interpret=False):
+    y, _ = ssm_scan(u, delta, A, B, C, D, block_d=block_d, chunk=chunk,
+                    interpret=interpret)
+    return y
+
+
+def _fwd(u, delta, A, B, C, D, block_d, chunk, interpret):
+    y, _ = ssm_scan(u, delta, A, B, C, D, block_d=block_d, chunk=chunk,
+                    interpret=interpret)
+    return y, (u, delta, A, B, C, D)
+
+
+def _bwd(block_d, chunk, interpret, res, dy):
+    u, delta, A, B, C, D = res
+    _, vjp = jax.vjp(lambda *a: ssm_scan_ref(*a)[0], u, delta, A, B, C, D)
+    return vjp(dy)
+
+
+selective_scan.defvjp(_fwd, _bwd)

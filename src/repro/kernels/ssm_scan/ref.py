@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the selective scan (sequential lax.scan)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssm_scan_ref(u, delta, A, B, C, D):
+    """Sequential reference. Same signature as kernels.ssm_scan.ssm_scan."""
+    u32 = u.astype(jnp.float32)
+    d32 = delta.astype(jnp.float32)
+
+    def step(h, xs):
+        u_t, d_t, b_t, c_t = xs           # (B,DI), (B,DI), (B,N), (B,N)
+        dA = jnp.exp(d_t[..., None] * A[None])
+        h = dA * h + (d_t * u_t)[..., None] * b_t[:, None, :]
+        y = jnp.sum(h * c_t[:, None, :], axis=2)
+        return h, y
+
+    Bb, S, DI = u.shape
+    h0 = jnp.zeros((Bb, DI, A.shape[1]), jnp.float32)
+    xs = (u32.transpose(1, 0, 2), d32.transpose(1, 0, 2),
+          B.astype(jnp.float32).transpose(1, 0, 2),
+          C.astype(jnp.float32).transpose(1, 0, 2))
+    h_last, ys = jax.lax.scan(step, h0, xs)
+    y = ys.transpose(1, 0, 2) + u32 * D[None, None].astype(jnp.float32)
+    return y.astype(u.dtype), h_last

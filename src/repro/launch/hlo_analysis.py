@@ -1,0 +1,277 @@
+"""Trip-count-aware HLO cost analysis.
+
+XLA's HloCostAnalysis (what `compiled.cost_analysis()` reports) counts a
+while-loop body ONCE — under scan-over-layers every per-layer matmul, byte and
+collective is under-counted by the trip count (64× for a 64-layer model). This
+module re-derives flops / bytes-accessed / collective bytes from the
+post-optimization HLO text, walking the computation graph with while bodies
+multiplied by their static trip counts (jax scan lowers to `while` whose
+condition compares the induction variable against a constant).
+
+Conventions follow HloCostAnalysis where it is correct:
+  * dot flops = 2 · prod(output dims) · prod(lhs contracting dims)
+  * bytes accessed per op = operand bytes + output bytes; fusions are counted
+    at the fusion boundary (internals are register traffic, not HBM), except
+    dots inside fusion bodies still count as flops
+  * collective bytes = operand bytes of all-reduce / all-gather /
+    reduce-scatter / all-to-all / collective-permute (and -start forms)
+
+Validated against unrolled references in tests/test_hlo_analysis.py.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e4m3b11fnuz": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_COMMENT_RE = re.compile(r"/\*.*?\*/")
+_ASSIGN_RE = re.compile(r"^(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_OPCODE_RE = re.compile(r"([a-zA-Z][\w\-]*)\(")
+_COMP_HDR_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\((.*)\)\s*->.*\{")
+_COLL_KINDS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute", "ragged-all-to-all")
+_SKIP_OPS = {"parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+             "after-all", "partition-id", "replica-id", "iota", "rng-bit-generator"}
+
+
+def _shapes_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _first_shape_dims(text: str) -> tuple[int, ...] | None:
+    m = _SHAPE_RE.search(text)
+    if not m:
+        return None
+    return tuple(int(d) for d in m.group(2).split(",") if d)
+
+
+@dataclass
+class Costs:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_by_kind: dict = field(default_factory=dict)
+    coll_counts: dict = field(default_factory=dict)
+
+    def add(self, o: "Costs", scale: float = 1.0):
+        self.flops += o.flops * scale
+        self.bytes += o.bytes * scale
+        self.coll_bytes += o.coll_bytes * scale
+        for k, v in o.coll_by_kind.items():
+            self.coll_by_kind[k] = self.coll_by_kind.get(k, 0.0) + v * scale
+        for k, v in o.coll_counts.items():
+            self.coll_counts[k] = self.coll_counts.get(k, 0) + v * scale
+
+
+@dataclass
+class _Op:
+    name: str
+    ret: str
+    opcode: str
+    operands: list[str]
+    attrs: str
+    line: str
+
+
+class HloModule:
+    def __init__(self, text: str):
+        self.computations: dict[str, list[_Op]] = {}
+        self.symtab: dict[str, dict[str, str]] = {}  # comp -> name -> ret type
+        self.entry: str | None = None
+        cur = None
+        for raw in text.splitlines():
+            line = raw.strip()
+            if not line or line.startswith("//"):
+                continue
+            hdr = _COMP_HDR_RE.match(line)
+            if hdr:
+                cur = hdr.group(2)
+                self.computations[cur] = []
+                self.symtab[cur] = {}
+                if hdr.group(1):
+                    self.entry = cur
+                # parameters from the signature: "name: f32[...]"
+                for pname, ptype in re.findall(r"%?([\w.\-]+)\s*:\s*([^,)]+)",
+                                               hdr.group(3)):
+                    self.symtab[cur][pname] = ptype
+                continue
+            if line.startswith("}"):
+                cur = None
+                continue
+            if cur is None:
+                continue
+            line_nc = _COMMENT_RE.sub("", line)
+            m = _ASSIGN_RE.match(line_nc)
+            if not m:
+                continue
+            name, rest = m.groups()
+            mo = _OPCODE_RE.search(rest)
+            if not mo:
+                continue
+            opcode = mo.group(1)
+            ret = rest[:mo.start()].strip()
+            tail = rest[mo.end():]
+            operands = tail.split(")", 1)[0]
+            attrs = tail.split(")", 1)[1] if ")" in tail else ""
+            ops = [o.strip().lstrip("%") for o in operands.split(",") if o.strip()]
+            self.computations[cur].append(_Op(name, ret, opcode, ops,
+                                              attrs, line_nc))
+            self.symtab[cur][name] = ret
+        self._memo: dict[str, Costs] = {}
+
+    # -- helpers ----------------------------------------------------------------
+
+    def _operand_bytes(self, comp: str, op: _Op) -> int:
+        total = 0
+        for o in op.operands:
+            t = self.symtab[comp].get(o)
+            if t:
+                total += _shapes_bytes(t)
+        return total
+
+    def _dot_flops(self, comp: str, op: _Op) -> float:
+        out_dims = _first_shape_dims(op.ret)
+        if out_dims is None:
+            return 0.0
+        lhs_t = self.symtab[comp].get(op.operands[0], "") if op.operands else ""
+        lhs_dims = _first_shape_dims(lhs_t) or ()
+        mc = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.line)
+        contract = 1
+        if mc and mc.group(1) and lhs_dims:
+            for i in mc.group(1).split(","):
+                contract *= lhs_dims[int(i)]
+        out_elems = 1
+        for d in out_dims:
+            out_elems *= d
+        return 2.0 * out_elems * contract
+
+    def trip_count(self, cond_name: str) -> int:
+        consts = []
+        for op in self.computations.get(cond_name, []):
+            if op.opcode == "constant":
+                m = re.search(r"constant\((-?\d+)\)", op.line)
+                if m:
+                    consts.append(int(m.group(1)))
+        pos = [c for c in consts if c > 0]
+        return max(pos) if pos else 1
+
+    def _fusion_flops(self, comp_name: str) -> float:
+        total = 0.0
+        for op in self.computations.get(comp_name, []):
+            if op.opcode == "dot":
+                total += self._dot_flops(comp_name, op)
+            elif op.opcode == "fusion":
+                mc = re.search(r"calls=%?([\w.\-]+)", op.line)
+                if mc:
+                    total += self._fusion_flops(mc.group(1))
+        return total
+
+    def _dus_adjustment(self, comp_name: str) -> int:
+        """In-place dynamic-update-slice inside a fusion: the full accumulator
+        buffer is aliased, not read+written — count 2×update instead
+        (HloCostAnalysis convention). Returns bytes to SUBTRACT from the
+        boundary count (full buffers) minus bytes to add back (updates)."""
+        adj = 0
+        for op in self.computations.get(comp_name, []):
+            if op.opcode == "dynamic-update-slice" and len(op.operands) >= 2:
+                target_t = self.symtab[comp_name].get(op.operands[0], "")
+                update_t = self.symtab[comp_name].get(op.operands[1], "")
+                adj += 2 * _shapes_bytes(target_t) - 2 * _shapes_bytes(update_t)
+            elif op.opcode == "fusion":
+                mc = re.search(r"calls=%?([\w.\-]+)", op.line)
+                if mc:
+                    adj += self._dus_adjustment(mc.group(1))
+        return adj
+
+    # -- main walk ----------------------------------------------------------------
+
+    def computation_costs(self, name: str, _depth: int = 0) -> Costs:
+        if name in self._memo:
+            return self._memo[name]
+        total = Costs()
+        if _depth > 60:
+            return total
+        for op in self.computations.get(name, []):
+            base = op.opcode[:-6] if op.opcode.endswith("-start") else op.opcode
+            if op.opcode == "while":
+                mb = re.search(r"body=%?([\w.\-]+)", op.line)
+                mc = re.search(r"condition=%?([\w.\-]+)", op.line)
+                if mb and mc:
+                    trips = self.trip_count(mc.group(1))
+                    total.add(self.computation_costs(mb.group(1), _depth + 1),
+                              scale=trips)
+            elif op.opcode == "conditional":
+                mbr = re.search(r"branch_computations=\{([^}]*)\}", op.line)
+                if mbr:
+                    branches = [b.strip().lstrip("%") for b in mbr.group(1).split(",")]
+                    costs = [self.computation_costs(b, _depth + 1) for b in branches]
+                    if costs:
+                        best = max(costs, key=lambda c: c.flops + c.bytes)
+                        total.add(best)
+            elif op.opcode == "call":
+                mcal = re.search(r"to_apply=%?([\w.\-]+)", op.line)
+                if mcal:
+                    total.add(self.computation_costs(mcal.group(1), _depth + 1))
+            elif op.opcode == "fusion":
+                mcal = re.search(r"calls=%?([\w.\-]+)", op.line)
+                b = self._operand_bytes(name, op) + _shapes_bytes(op.ret)
+                if mcal:
+                    total.flops += self._fusion_flops(mcal.group(1))
+                    b -= self._dus_adjustment(mcal.group(1))
+                total.bytes += max(b, 0)
+            elif op.opcode == "dynamic-update-slice":
+                upd = self.symtab[name].get(op.operands[1], "") \
+                    if len(op.operands) >= 2 else ""
+                total.bytes += 2 * _shapes_bytes(upd)
+            elif op.opcode in ("dynamic-slice", "gather"):
+                total.bytes += 2 * _shapes_bytes(op.ret)
+            elif op.opcode == "scatter":
+                upd = self.symtab[name].get(op.operands[-1], "") \
+                    if op.operands else ""
+                total.bytes += 4 * _shapes_bytes(upd)  # read+write idx'd region
+            elif op.opcode == "dot":
+                total.flops += self._dot_flops(name, op)
+                total.bytes += self._operand_bytes(name, op) + _shapes_bytes(op.ret)
+            elif base in _COLL_KINDS:
+                b = self._operand_bytes(name, op)
+                total.coll_bytes += b
+                total.coll_by_kind[base] = total.coll_by_kind.get(base, 0.0) + b
+                total.coll_counts[base] = total.coll_counts.get(base, 0) + 1
+                total.bytes += b + _shapes_bytes(op.ret)
+            elif base.endswith("-done") or op.opcode in _SKIP_OPS:
+                pass
+            else:
+                total.bytes += self._operand_bytes(name, op) + _shapes_bytes(op.ret)
+        self._memo[name] = total
+        return total
+
+
+def analyze(hlo_text: str) -> dict:
+    mod = HloModule(hlo_text)
+    entry = mod.entry or next(iter(mod.computations), None)
+    if entry is None:
+        return {"flops": 0.0, "bytes": 0.0, "collective_bytes": 0.0,
+                "collectives": {}, "collective_counts": {}}
+    c = mod.computation_costs(entry)
+    return {"flops": c.flops, "bytes": c.bytes,
+            "collective_bytes": c.coll_bytes,
+            "collectives": c.coll_by_kind,
+            "collective_counts": c.coll_counts}

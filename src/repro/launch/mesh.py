@@ -1,0 +1,27 @@
+"""Production mesh construction. TPU v5e pod targets: 16×16 = 256 chips/pod
+("data", "model"); multi-pod 2×16×16 = 512 chips ("pod", "data", "model").
+
+A FUNCTION, not a module constant — importing this module must never touch
+jax device state (the dry-run pins the device count before first jax init).
+"""
+
+from __future__ import annotations
+
+import jax
+
+# TPU v5e hardware constants (roofline denominators)
+PEAK_FLOPS_BF16 = 197e12        # per chip
+HBM_BW = 819e9                  # bytes/s per chip
+ICI_BW = 50e9                   # bytes/s per link
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def mesh_info(mesh) -> dict:
+    return {"shape": [int(s) for s in mesh.devices.shape],
+            "axes": list(mesh.axis_names)}

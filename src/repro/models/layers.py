@@ -1,0 +1,237 @@
+"""Core neural layers: RMSNorm, RoPE, gated MLPs, and GQA attention with
+full / sliding-window masking, chunked (flash-style) prefill, banded local
+prefill, and single-token decode against KV or ring-buffer caches.
+
+All softmax/normalization math accumulates in fp32 regardless of param dtype.
+The XLA paths here are also the `ref` semantics the Pallas kernels must match.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0 ** 30  # large-but-finite; avoids NaNs from (-inf) - (-inf)
+
+
+# ---------------------------------------------------------------------------
+# norms / activations / mlp
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, weight, *, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + weight.astype(jnp.float32))).astype(x.dtype)
+
+
+def activation(x, kind: str):
+    if kind == "silu":
+        return jax.nn.silu(x)
+    if kind == "gelu":
+        return jax.nn.gelu(x)
+    if kind == "relu":
+        return jax.nn.relu(x)
+    if kind == "relu2":
+        r = jax.nn.relu(x)
+        return r * r
+    raise ValueError(f"unknown activation {kind!r}")
+
+
+def mlp(x, w, *, act: str, gated: bool):
+    """w: {"up": (D,F), "down": (F,D)[, "gate": (D,F)]}; x: (..., D)."""
+    up = x @ w["up"]
+    h = activation(x @ w["gate"], act) * up if gated else activation(up, act)
+    return h @ w["down"]
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope(x, positions, *, theta: float):
+    """x: (..., S, H, hd) rotated by `positions` (broadcastable to (..., S))."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = jnp.exp(-math.log(theta) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[..., :, None].astype(jnp.float32) * freq  # (..., S, half)
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    sin = sin[..., :, None, :]  # (..., S, 1, half) broadcast over heads
+    cos = cos[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention cores
+# ---------------------------------------------------------------------------
+
+def _gqa_scores(q, k):
+    """q: (B,C,KV,G,hd), k: (B,S,KV,hd) -> (B,KV,G,C,S) fp32."""
+    return jnp.einsum("bckgh,bskh->bkgcs", q, k,
+                      preferred_element_type=jnp.float32)
+
+
+def _gqa_out(p, v):
+    """p: (B,KV,G,C,S) fp32, v: (B,S,KV,hd) -> (B,C,KV,G,hd)."""
+    return jnp.einsum("bkgcs,bskh->bckgh", p, v.astype(jnp.float32))
+
+
+def _mask_bias(qpos, kpos, *, window: int, kv_valid_len=None):
+    """(C,S) additive bias: causal + optional sliding window + cache validity."""
+    m = kpos[None, :] <= qpos[:, None]
+    if window:
+        m &= kpos[None, :] > qpos[:, None] - window
+    if kv_valid_len is not None:
+        m &= kpos[None, :] < kv_valid_len
+    return jnp.where(m, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def attention(q, k, v, *, q_offset=0, window: int = 0, q_chunk: int = 1024,
+              kv_valid_len=None, scale: float | None = None):
+    """Causal (optionally sliding-window) GQA attention.
+
+    q: (B,Sq,H,hd); k,v: (B,Skv,KV,hd). H % KV == 0. `q_offset` is the global
+    position of q[0] (prefill continuation / decode). Memory is bounded by
+    chunking queries (flash-attention access pattern at the XLA level); for
+    window layers the kv range per chunk is additionally sliced to the band,
+    so local-attention prefill does O(S·window) work, not O(S²).
+    """
+    B, Sq, H, hd = q.shape
+    _, Skv, KV, _ = k.shape
+    G = H // KV
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    qg = (q * scale).reshape(B, Sq, KV, G, hd)
+
+    if Sq == 1:  # decode fast path
+        qpos = jnp.asarray([q_offset])
+        bias = _mask_bias(qpos, jnp.arange(Skv), window=window,
+                          kv_valid_len=kv_valid_len)
+        s = _gqa_scores(qg, k) + bias
+        p = jax.nn.softmax(s, axis=-1)
+        return _gqa_out(p, v).reshape(B, Sq, H, hd).astype(q.dtype)
+
+    q_chunk = min(q_chunk, Sq)
+    if Sq % q_chunk != 0:
+        q_chunk = math.gcd(Sq, q_chunk) or Sq
+    n_chunks = Sq // q_chunk
+    qs = qg.reshape(B, n_chunks, q_chunk, KV, G, hd).transpose(1, 0, 2, 3, 4, 5)
+    starts = jnp.arange(n_chunks) * q_chunk
+
+    banded = bool(window) and Skv > 2 * (window + q_chunk)
+    if banded:
+        band = window + q_chunk  # kv slice covering the chunk's reachable keys
+        band = min(band, Skv)
+
+    def body(_, xs):
+        qc, start = xs
+        qpos = q_offset + start + jnp.arange(q_chunk)
+        if banded:
+            lo = jnp.clip(start + q_offset - window + 1, 0, Skv - band)
+            kc = jax.lax.dynamic_slice_in_dim(k, lo, band, axis=1)
+            vc = jax.lax.dynamic_slice_in_dim(v, lo, band, axis=1)
+            kpos = lo + jnp.arange(band)
+        else:
+            kc, vc, kpos = k, v, jnp.arange(Skv)
+        bias = _mask_bias(qpos, kpos, window=window, kv_valid_len=kv_valid_len)
+        s = _gqa_scores(qc, kc) + bias
+        p = jax.nn.softmax(s, axis=-1)
+        return None, _gqa_out(p, vc)
+
+    _, out = jax.lax.scan(body, None, (qs, starts))
+    out = out.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq, H, hd)
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# KV caches: full and ring-buffer (sliding window)
+# ---------------------------------------------------------------------------
+
+def init_kv_cache(batch, max_len, n_kv, hd, dtype):
+    return {
+        "k": jnp.zeros((batch, max_len, n_kv, hd), dtype),
+        "v": jnp.zeros((batch, max_len, n_kv, hd), dtype),
+    }
+
+
+def cache_update_full(cache, k_new, v_new, pos):
+    """Insert (B,S_new,KV,hd) at position `pos` (scalar)."""
+    k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new, pos, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new, pos, axis=1)
+    return {"k": k, "v": v}
+
+
+def ring_positions(pos, window):
+    """Global position held by each ring slot when the newest token is at
+    global position `pos`: slot i holds pos_i = pos - ((pos - i) mod window)."""
+    i = jnp.arange(window)
+    return pos - jnp.mod(pos - i, window)
+
+
+def cache_update_ring(cache, k_new, v_new, pos):
+    """Decode-time single-token ring insert at slot pos % window."""
+    window = cache["k"].shape[1]
+    slot = jnp.mod(pos, window)
+    k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new, slot, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new, slot, axis=1)
+    return {"k": k, "v": v}
+
+
+def ring_fill_from_prefill(k_full, v_full, window):
+    """After prefilling S tokens, load the trailing `window` of them into ring
+    slots (slot of global position p is p % window). Handles S < window by
+    leaving future slots zeroed (masked out via ring_positions validity)."""
+    B, S, KV, hd = k_full.shape
+    if S < window:
+        pad = window - S
+        k = jnp.pad(k_full, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v_full, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        return {"k": k, "v": v}
+    base = S - window
+    perm = base + jnp.mod(jnp.arange(window) - base, window)
+    return {"k": jnp.take(k_full, perm, axis=1), "v": jnp.take(v_full, perm, axis=1)}
+
+
+def decode_attention_ring(q, cache, pos, *, window, scale=None):
+    """Single-token attention against a ring-buffer cache."""
+    B, _, H, hd = q.shape
+    KV = cache["k"].shape[2]
+    G = H // KV
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    kpos = ring_positions(pos, window)
+    valid = (kpos >= 0) & (kpos > pos - window) & (kpos <= pos)
+    bias = jnp.where(valid, 0.0, NEG_INF).astype(jnp.float32)
+    qg = (q * scale).reshape(B, 1, KV, G, hd)
+    s = _gqa_scores(qg, cache["k"]) + bias[None, :]
+    p = jax.nn.softmax(s, axis=-1)
+    return _gqa_out(p, cache["v"]).reshape(B, 1, H, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# depthwise causal conv (mamba / rglru)
+# ---------------------------------------------------------------------------
+
+def causal_conv1d(x, w):
+    """x: (B,S,C), w: (C,K) depthwise causal conv, no bias."""
+    K = w.shape[-1]
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(K):  # K is 4: unrolled shifted adds beat conv lowering
+        shift = K - 1 - i
+        xi = jnp.pad(x, ((0, 0), (shift, 0), (0, 0)))[:, :x.shape[1]]
+        out = out + xi.astype(jnp.float32) * w[:, i].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def conv_state_update(state, x_new, w):
+    """Streaming conv: state (B,K-1,C) holds the last K-1 inputs.
+    x_new: (B,1,C). Returns (y (B,1,C), new_state)."""
+    K = w.shape[-1]
+    window = jnp.concatenate([state, x_new], axis=1)          # (B,K,C)
+    y = jnp.einsum("bkc,ck->bc", window.astype(jnp.float32),
+                   w.astype(jnp.float32))[:, None]
+    return y.astype(x_new.dtype), window[:, 1:]

@@ -1,0 +1,44 @@
+"""Model facade: shape templates (`input_specs`, `param_specs`, `cache_specs`)
+used by the dry-run (ShapeDtypeStruct stand-ins, no allocation) and by
+checkpoint restore templates."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from . import transformer as T
+
+
+def input_specs(cfg: ModelConfig, *, kind: str, seq_len: int, batch: int) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of a step function.
+
+    kind: "train" (tokens+labels), "prefill" (tokens), "decode" (one token +
+    cache position). [audio]/[vlm] archs take precomputed frontend embeddings.
+    """
+    emb = jnp.dtype(cfg.dtype)
+    if cfg.embed_inputs:
+        def tok(b, s):
+            return jax.ShapeDtypeStruct((b, s), jnp.int32)
+    else:
+        def tok(b, s):
+            return jax.ShapeDtypeStruct((b, s, cfg.d_model), emb)
+    if kind == "train":
+        return {"inputs": tok(batch, seq_len),
+                "labels": jax.ShapeDtypeStruct((batch, seq_len), jnp.int32)}
+    if kind == "prefill":
+        return {"inputs": tok(batch, seq_len)}
+    if kind == "decode":
+        return {"inputs": tok(batch, 1),
+                "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+    raise ValueError(kind)
+
+
+def param_specs(cfg: ModelConfig):
+    """Parameter ShapeDtypeStructs without allocating (eval_shape over init)."""
+    return jax.eval_shape(lambda: T.init_params(cfg, jax.random.key(0)))
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int):
+    return jax.eval_shape(lambda: T.init_cache(cfg, batch, max_len))

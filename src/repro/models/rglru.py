@@ -1,0 +1,91 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin).
+
+Recurrence (per channel):
+    r_t = sigmoid(W_r x_t + b_r)           (recurrence gate, block-diag W)
+    i_t = sigmoid(W_i x_t + b_i)           (input gate, block-diag W)
+    a_t = exp(-c * softplus(Λ) * r_t)      (c = 8.0)
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ x_t)
+
+The full recurrent block is: x -> [linear -> conv1d -> RG-LRU] ⊙ gelu(linear)
+-> linear, mirroring Griffin's temporal-mixing block. Sequence path uses an
+associative scan; decode carries (conv window, h) — O(1) state.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import RGLRUConfig
+from .layers import causal_conv1d, conv_state_update
+
+_C = 8.0
+
+
+def _block_diag_linear(x, w, b):
+    """x: (...,W); w: (nb, W/nb, W/nb); b: (W,)."""
+    nb, bs, _ = w.shape
+    xs = x.reshape(*x.shape[:-1], nb, bs)
+    y = jnp.einsum("...nb,nbc->...nc", xs, w)
+    return y.reshape(*x.shape[:-1], nb * bs) + b
+
+
+def _gates(x, w):
+    """Returns (a_t, gated_input) for the recurrence, fp32."""
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(_block_diag_linear(xf, w["w_r"].astype(jnp.float32),
+                                          w["b_r"].astype(jnp.float32)))
+    i = jax.nn.sigmoid(_block_diag_linear(xf, w["w_i"].astype(jnp.float32),
+                                          w["b_i"].astype(jnp.float32)))
+    log_a = -_C * jax.nn.softplus(w["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.clip(1.0 - jnp.exp(2.0 * log_a), 0.0, 1.0))
+    return a, beta * (i * xf)
+
+
+def rg_lru(x, w, h0=None):
+    """Sequence RG-LRU. x: (B,S,W) -> (y (B,S,W), h_last (B,W))."""
+    a, bx = _gates(x, w)
+
+    def op(l, r):
+        a1, b1 = l
+        a2, b2 = r
+        return a1 * a2, a2 * b1 + b2
+
+    if h0 is not None:
+        bx = bx.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+    _, h = jax.lax.associative_scan(op, (a, bx), axis=1)
+    return h.astype(x.dtype), h[:, -1]
+
+
+def rg_lru_step(x_t, h, w):
+    """x_t: (B,W); h: (B,W) fp32. Returns (y (B,W), h_new)."""
+    a, bx = _gates(x_t, w)
+    h_new = a * h + bx
+    return h_new.astype(x_t.dtype), h_new
+
+
+def recurrent_block(x, w, cfg: RGLRUConfig):
+    """Griffin temporal-mixing block, sequence path. x: (B,S,D) -> (B,S,D)."""
+    branch = x @ w["in_x"]                                   # (B,S,W)
+    branch = causal_conv1d(branch, w["conv"])
+    y, _ = rg_lru(branch, w["lru"])
+    gate = jax.nn.gelu(x @ w["in_gate"])
+    return (y * gate) @ w["out"]
+
+
+def recurrent_init_state(batch, width, cfg: RGLRUConfig, dtype):
+    return {
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, width), dtype),
+        "h": jnp.zeros((batch, width), jnp.float32),
+    }
+
+
+def recurrent_step(x_t, state, w, cfg: RGLRUConfig):
+    """x_t: (B,1,D). Returns (y (B,1,D), new_state)."""
+    branch = x_t @ w["in_x"]                                 # (B,1,W)
+    branch, conv_state = conv_state_update(state["conv"], branch, w["conv"])
+    y, h = rg_lru_step(branch[:, 0], state["h"], w["lru"])
+    gate = jax.nn.gelu(x_t @ w["in_gate"])
+    out = (y[:, None] * gate) @ w["out"]
+    return out, {"conv": conv_state, "h": h}

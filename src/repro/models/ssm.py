@@ -1,0 +1,122 @@
+"""Mamba-1 block (falcon-mamba-7b): gated selective state-space model.
+
+Sequence path (train / prefill) uses an associative scan over the diagonal
+recurrence h_t = A_t ⊙ h_{t-1} + B_t x_t — log-depth on TPU, and the semantics
+the Pallas ssm_scan kernel reproduces with a chunked carried-state layout.
+Decode keeps O(1) state: (conv window, ssm state), the property that makes the
+arch eligible for the long_500k shape.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import SSMConfig
+from .layers import causal_conv1d, conv_state_update
+
+
+def _scan_op(l, r):
+    a1, b1 = l
+    a2, b2 = r
+    return a2 * a1, a2 * b1 + b2
+
+
+def selective_scan(u, delta, A, B, C, D, *, chunk: int = 128):
+    """u: (B,S,DI); delta: (B,S,DI); A: (DI,N); B,C: (B,S,N); D: (DI,).
+    Returns (y (B,S,DI), h_last (B,DI,N)). fp32 internally.
+
+    Chunked: a sequential lax.scan over S/chunk chunks carries the (B,DI,N)
+    state; the log-depth associative scan runs within each chunk. The naive
+    whole-sequence associative scan materializes the (B,S,DI,N) recurrence
+    tensor — ~120 GiB/device for falcon-mamba train_4k. Mirrors the Pallas
+    ssm_scan kernel's carried-state layout.
+    """
+    Bb, S, DI = u.shape
+    N = A.shape[1]
+    c = min(chunk, S)
+    while S % c != 0:
+        c -= 1
+    n = S // c
+
+    def one_chunk(h0, xs):
+        u_c, d_c, B_c, C_c = xs                         # (B, c, ...)
+        dA = jnp.exp(d_c[..., None] * A[None, None])    # (B,c,DI,N)
+        dBu = (d_c * u_c)[..., None] * B_c[:, :, None, :]
+        acum, bcum = jax.lax.associative_scan(_scan_op, (dA, dBu), axis=1)
+        hs = acum * h0[:, None] + bcum                  # (B,c,DI,N)
+        y = jnp.einsum("bsdn,bsn->bsd", hs, C_c)
+        return hs[:, -1], y
+
+    u32, d32 = u.astype(jnp.float32), delta.astype(jnp.float32)
+    B32, C32 = B.astype(jnp.float32), C.astype(jnp.float32)
+    if n == 1:
+        h_last, y = one_chunk(jnp.zeros((Bb, DI, N), jnp.float32),
+                              (u32, d32, B32, C32))
+    else:
+        def to_chunks(x):
+            return x.reshape(Bb, n, c, *x.shape[2:]).transpose(1, 0, 2, *range(3, x.ndim + 1))
+        xs = tuple(to_chunks(x) for x in (u32, d32, B32, C32))
+        h_last, ys = jax.lax.scan(one_chunk, jnp.zeros((Bb, DI, N), jnp.float32), xs)
+        y = ys.transpose(1, 0, 2, 3).reshape(Bb, S, DI)
+    y = (y + u32 * D[None, None]).astype(u.dtype)
+    return y, h_last
+
+
+def selective_scan_step(state, u_t, delta_t, A, B_t, C_t, D):
+    """One recurrence step. state: (B,DI,N); u_t,delta_t: (B,DI);
+    B_t,C_t: (B,N). Returns (y_t (B,DI), new_state)."""
+    d32 = delta_t.astype(jnp.float32)
+    dA = jnp.exp(d32[..., None] * A[None])                        # (B,DI,N)
+    dBu = d32[..., None] * B_t[:, None, :].astype(jnp.float32) * \
+        u_t.astype(jnp.float32)[..., None]
+    new_state = dA * state + dBu
+    y = jnp.einsum("bdn,bn->bd", new_state, C_t.astype(jnp.float32))
+    return (y + u_t.astype(jnp.float32) * D[None]).astype(u_t.dtype), new_state
+
+
+def _project(x, w, cfg: SSMConfig, d_model: int):
+    """Shared input projections. x: (B,S,D) -> (u, gate, delta, B, C)."""
+    d_inner = cfg.expand * d_model
+    dt_rank = cfg.resolved_dt_rank(d_model)
+    ug = x @ w["in_proj"]                                         # (B,S,2*DI)
+    u, gate = jnp.split(ug, 2, axis=-1)
+    u = causal_conv1d(u, w["conv"]) if x.shape[1] > 1 else u      # seq path conv
+    u = jax.nn.silu(u)
+    xdbc = u @ w["x_proj"]                                        # (B,S,dt+2N)
+    dt, Bm, Cm = jnp.split(xdbc, [dt_rank, dt_rank + cfg.d_state], axis=-1)
+    delta = jax.nn.softplus(dt @ w["dt_proj"] + w["dt_bias"])     # (B,S,DI)
+    return u, gate, delta, Bm, Cm
+
+
+def mamba_block(x, w, cfg: SSMConfig):
+    """Full-sequence mamba block. x: (B,S,D) -> (B,S,D)."""
+    A = -jnp.exp(w["A_log"].astype(jnp.float32))                  # (DI,N)
+    u, gate, delta, Bm, Cm = _project(x, w, cfg, x.shape[-1])
+    y, _ = selective_scan(u, delta, A, Bm, Cm, w["D"])
+    y = y * jax.nn.silu(gate)
+    return y @ w["out_proj"]
+
+
+def mamba_init_state(batch, d_model, cfg: SSMConfig, dtype):
+    d_inner = cfg.expand * d_model
+    return {
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, d_inner), dtype),
+        "ssm": jnp.zeros((batch, d_inner, cfg.d_state), jnp.float32),
+    }
+
+
+def mamba_step(x_t, state, w, cfg: SSMConfig):
+    """Streaming decode. x_t: (B,1,D). Returns (y (B,1,D), new_state)."""
+    A = -jnp.exp(w["A_log"].astype(jnp.float32))
+    ug = x_t @ w["in_proj"]
+    u, gate = jnp.split(ug, 2, axis=-1)                           # (B,1,DI)
+    u_conv, conv_state = conv_state_update(state["conv"], u, w["conv"])
+    u_act = jax.nn.silu(u_conv)[:, 0]                             # (B,DI)
+    dt_rank = cfg.resolved_dt_rank(x_t.shape[-1])
+    xdbc = u_act @ w["x_proj"]
+    dt, Bm, Cm = jnp.split(xdbc, [dt_rank, dt_rank + cfg.d_state], axis=-1)
+    delta = jax.nn.softplus(dt @ w["dt_proj"] + w["dt_bias"])     # (B,DI)
+    y, ssm_state = selective_scan_step(state["ssm"], u_act, delta, A, Bm, Cm, w["D"])
+    y = y[:, None] * jax.nn.silu(gate)
+    return y @ w["out_proj"], {"conv": conv_state, "ssm": ssm_state}

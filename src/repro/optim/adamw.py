@@ -1,0 +1,120 @@
+"""AdamW + linear-warmup cosine schedule + global-norm clipping.
+
+Pure pytree implementation (no optax dependency). Moments are fp32 regardless
+of param dtype; the update is computed in fp32 and cast back — bf16 params
+with fp32 optimizer state, the layout the checkpoint size model assumes
+(10 bytes/param: 2 + 4 + 4).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    peak_lr: float = 3e-4
+    min_lr_frac: float = 0.1
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    # Adafactor-style factored second moment for matrix params: nu becomes a
+    # (row, col) outer-product estimate, cutting optimizer state from
+    # 8 bytes/param to ~4 (mu fp32 + O(n+m) factors). At grok-314b scale the
+    # fp32 moments are 9.8 GiB/device on 256 chips — this is the structural
+    # fix, and it shrinks termination checkpoints by the same factor.
+    factored_second_moment: bool = False
+
+
+def lr_at(cfg: AdamWConfig, step):
+    step = jnp.asarray(step, jnp.float32)
+    warm = cfg.peak_lr * step / max(cfg.warmup_steps, 1)
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.peak_lr * (cfg.min_lr_frac
+                         + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(math.pi * t)))
+    return jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def _factorable(shape) -> bool:
+    """Factor the trailing two dims when both are >= 64 (matrix params;
+    stacked-layer leading dims ride along)."""
+    return len(shape) >= 2 and shape[-1] >= 64 and shape[-2] >= 64
+
+
+def init_opt_state(params, *, factored: bool = False) -> dict:
+    zeros32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+
+    def nu_init(p):
+        if factored and _factorable(p.shape):
+            return {"row": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "col": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+        return zeros32(p)
+
+    return {
+        "mu": jax.tree.map(zeros32, params),
+        "nu": jax.tree.map(nu_init, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(grads, opt_state, params, cfg: AdamWConfig):
+    count = opt_state["count"] + 1
+    lr = lr_at(cfg, count)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+
+    b1c = 1 - cfg.b1 ** count.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** count.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m + (1 - cfg.b1) * g32
+        if isinstance(v, dict):  # factored second moment (Adafactor)
+            g2 = g32 * g32 + 1e-30
+            row = cfg.b2 * v["row"] + (1 - cfg.b2) * jnp.mean(g2, axis=-1)
+            col = cfg.b2 * v["col"] + (1 - cfg.b2) * jnp.mean(g2, axis=-2)
+            v = {"row": row, "col": col}
+            denom = jnp.mean(row, axis=-1, keepdims=True) + 1e-30
+            vhat = (row[..., :, None] * col[..., None, :]
+                    / denom[..., None]) / b2c
+        else:
+            v = cfg.b2 * v + (1 - cfg.b2) * g32 * g32
+            vhat = v / b2c
+        mhat = m / b1c
+        step = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        p32 = p.astype(jnp.float32)
+        new_p = p32 - lr * (step + cfg.weight_decay * p32)
+        return new_p.astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(opt_state["mu"])
+    # nu may contain dict leaves (factored); align by flattening against params
+    flat_v = _flatten_nu(opt_state["nu"], treedef)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_params = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_mu = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_nu = jax.tree.unflatten(treedef, [o[2] for o in out])
+    metrics = {"lr": lr, "grad_norm": gnorm}
+    return new_params, {"mu": new_mu, "nu": new_nu, "count": count}, metrics
+
+
+def _flatten_nu(nu, params_treedef):
+    """Flatten nu to one leaf per param, keeping factored {row, col} dicts
+    intact as single entries."""
+    is_factored = lambda x: isinstance(x, dict) and set(x) == {"row", "col"}
+    return jax.tree.flatten(nu, is_leaf=is_factored)[0]

@@ -1,0 +1,49 @@
+"""Serving entry points: batched prefill and single-token decode.
+
+These are the functions the decode_32k / long_500k dry-run cells lower:
+`serve_step` = one new token against a seq_len-deep cache. Sampling is greedy
+(argmax) by default; serving state (caches + position) is an ordinary pytree,
+so the Spot-on coordinator can checkpoint *serving* sessions too — long-runs
+of batch inference on spot capacity are exactly the paper's use case.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..models import decode_step, init_cache, prefill
+from ..models.config import ModelConfig
+
+
+def sample_greedy(logits):
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def make_prefill(cfg: ModelConfig, *, cache_len: int | None = None):
+    def prefill_fn(params, inputs):
+        last_logits, caches, pos = prefill(params, cfg, inputs, cache_len=cache_len)
+        return sample_greedy(last_logits), caches, pos
+    return prefill_fn
+
+
+def make_decode_step(cfg: ModelConfig):
+    def serve_step(params, inputs, caches, pos):
+        logits, new_caches = decode_step(params, cfg, inputs, caches, pos)
+        return sample_greedy(logits), logits, new_caches
+    return serve_step
+
+
+def generate(params, cfg: ModelConfig, prompt, n_tokens: int, *,
+             cache_len: int | None = None):
+    """Greedy generation loop (examples / tests; not the dry-run path)."""
+    S = prompt.shape[1]
+    cache_len = cache_len or (S + n_tokens)
+    pre = jax.jit(make_prefill(cfg, cache_len=cache_len))
+    step = jax.jit(make_decode_step(cfg))
+    tok, caches, pos = pre(params, prompt)
+    out = [tok]
+    for i in range(n_tokens - 1):
+        tok, _, caches = step(params, out[-1][:, None], caches, S + i)
+        out.append(tok)
+    return jnp.stack(out, axis=1)

@@ -1,0 +1,5 @@
+from .train_step import TrainState, cross_entropy, init_train_state, make_train_step
+from .trainer import RunReport, SpotTrainer, TrainJob
+
+__all__ = ["RunReport", "SpotTrainer", "TrainJob", "TrainState",
+           "cross_entropy", "init_train_state", "make_train_step"]

@@ -1,0 +1,181 @@
+"""Training step: loss, grads, AdamW update; microbatch gradient accumulation
+and configurable activation rematerialization.
+
+TrainState is a plain dict so pytree key paths are stable across processes —
+checkpoint names depend on them. Everything a resume needs lives here
+(including the data-pipeline cursor and RNG key): the *transparent checkpoint*
+is exactly this pytree.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import forward, init_params
+from ..models.config import ModelConfig
+from ..optim import AdamWConfig, adamw_update, init_opt_state
+
+TrainState = dict  # {"params", "opt", "step", "rng", "data"}
+
+
+def cross_entropy(logits, labels, *, chunk_tokens: int = 32768):
+    """Mean CE over tokens, fp32 (stable log-softmax).
+
+    Computed in token chunks via lax.map so the fp32 upcast of the (T, V)
+    logits never materializes at once — with 256k-vocab models the one-shot
+    fp32 logits tensor alone is tens of GiB per device.
+    """
+    B, S, V = logits.shape
+    T = B * S
+    lf = logits.reshape(T, V)
+    yf = labels.reshape(T)
+    n_chunks = max(1, T // chunk_tokens)
+    while T % n_chunks != 0:
+        n_chunks -= 1
+    if n_chunks <= 1:
+        l32 = lf.astype(jnp.float32)
+        lse = jax.nn.logsumexp(l32, axis=-1)
+        gold = jnp.take_along_axis(l32, yf[:, None], axis=-1)[:, 0]
+        return jnp.mean(lse - gold)
+
+    def chunk_loss(args):
+        lc, yc = args
+        l32 = lc.astype(jnp.float32)
+        lse = jax.nn.logsumexp(l32, axis=-1)
+        gold = jnp.take_along_axis(l32, yc[:, None], axis=-1)[:, 0]
+        return jnp.sum(lse - gold)
+
+    per_chunk = jax.lax.map(chunk_loss,
+                            (lf.reshape(n_chunks, T // n_chunks, V),
+                             yf.reshape(n_chunks, T // n_chunks)))
+    return jnp.sum(per_chunk) / T
+
+
+def fused_unembed_xent(hidden, head, labels, *, seq_chunks: int = 8):
+    """Chunked fused unembed + cross-entropy (big-vocab memory optimization).
+
+    The (B, S, V) logits tensor never exists: per *sequence* chunk, logits are
+    computed (MXU matmul, fp32 accumulation), reduced to a loss sum, and
+    recomputed in backward (jax.checkpoint). Chunking over the sequence dim —
+    not flat tokens — keeps the batch dim data-sharded through the reshape;
+    flat-token chunks cross device shard boundaries and force XLA to
+    replicate token work across the vocab-sharded axis (measured 8× FLOP
+    inflation on the 16×16 mesh).
+    """
+    from ..distributed.sharding import shard_microbatched
+    B, S, D = hidden.shape
+    n = min(seq_chunks, S)
+    while S % n != 0:
+        n -= 1
+
+    @jax.checkpoint
+    def chunk_fn(args):
+        from ..distributed.sharding import shard_act
+        xc, yc = args                      # (B, S/n, D), (B, S/n)
+        logits = jnp.einsum("bsd,dv->bsv", xc, head,
+                            preferred_element_type=jnp.float32)
+        logits = shard_act(logits, "logits")   # keep vocab model-sharded
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, yc[..., None], axis=-1)[..., 0]
+        return jnp.sum(lse - gold)
+
+    if n <= 1:
+        return chunk_fn((hidden, labels)) / (B * S)
+    hs = hidden.reshape(B, n, S // n, D).transpose(1, 0, 2, 3)
+    ys = labels.reshape(B, n, S // n).transpose(1, 0, 2)
+    hs, ys = shard_microbatched((hs, ys))   # (n, B, ...) with B dp-sharded
+    per_chunk = jax.lax.map(chunk_fn, (hs, ys))
+    return jnp.sum(per_chunk) / (B * S)
+
+
+def init_train_state(cfg: ModelConfig, opt_cfg: AdamWConfig, seed: int = 0) -> TrainState:
+    params = init_params(cfg, jax.random.key(seed))
+    return {
+        "params": params,
+        "opt": init_opt_state(params,
+                              factored=opt_cfg.factored_second_moment),
+        "step": jnp.zeros((), jnp.int32),
+        "rng": jax.random.key_data(jax.random.key(seed + 1)),
+        "data": {"next_batch_index": jnp.zeros((), jnp.int32)},
+    }
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig, *,
+                    remat: str = "none", microbatches: int = 1,
+                    aux_weight: float | None = None, fused_ce: bool = True):
+    """Returns train_step(state, batch) -> (state, metrics), jit-able."""
+    aux_w = aux_weight if aux_weight is not None else \
+        (cfg.moe.aux_loss_weight if cfg.moe else 0.0)
+
+    def loss_fn(params, inputs, labels):
+        if fused_ce:
+            from ..models.transformer import unembed_weights
+            hidden, aux, _ = forward(params, cfg, inputs, remat=remat,
+                                     return_hidden=True)
+            ce = fused_unembed_xent(hidden, unembed_weights(params, cfg), labels)
+        else:
+            logits, aux, _ = forward(params, cfg, inputs, remat=remat)
+            ce = cross_entropy(logits, labels)
+        return ce + aux_w * aux, (ce, aux)
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def single(params, batch):
+        (loss, (ce, aux)), grads = grad_fn(params, batch["inputs"], batch["labels"])
+        return loss, ce, aux, grads
+
+    def accumulate(params, batch):
+        from ..distributed.sharding import shard_microbatched
+        B = batch["inputs"].shape[0]
+        assert B % microbatches == 0, (B, microbatches)
+        mb = jax.tree.map(
+            lambda x: x.reshape(microbatches, B // microbatches, *x.shape[1:]),
+            batch)
+        mb = shard_microbatched(mb)
+
+        def body(acc, mbatch):
+            loss, ce, aux, grads = single(params, mbatch)
+            acc = jax.tree.map(jnp.add, acc,
+                               {"loss": loss, "ce": ce, "aux": aux, "grads":
+                                jax.tree.map(lambda g: g.astype(jnp.float32), grads)})
+            return acc, None
+
+        zero = {"loss": jnp.zeros((), jnp.float32),
+                "ce": jnp.zeros((), jnp.float32),
+                "aux": jnp.zeros((), jnp.float32),
+                "grads": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                      params)}
+        acc, _ = jax.lax.scan(body, zero, mb)
+        inv = 1.0 / microbatches
+        return (acc["loss"] * inv, acc["ce"] * inv, acc["aux"] * inv,
+                jax.tree.map(lambda g: g * inv, acc["grads"]))
+
+    def train_step(state: TrainState, batch) -> tuple[TrainState, dict]:
+        params = state["params"]
+        if microbatches > 1:
+            loss, ce, aux, grads = accumulate(params, batch)
+        else:
+            loss, ce, aux, grads = single(params, batch)
+        new_params, new_opt, opt_metrics = adamw_update(
+            grads, state["opt"], params, opt_cfg)
+        new_state = {
+            "params": new_params,
+            "opt": new_opt,
+            "step": state["step"] + 1,
+            "rng": state["rng"],
+            "data": {"next_batch_index": state["data"]["next_batch_index"] + 1},
+        }
+        metrics = {"loss": loss, "ce": ce, "aux": aux, **opt_metrics}
+        return new_state, metrics
+
+    return train_step
+
+
+def state_template(state: TrainState):
+    """Zero-valued template with identical structure/shapes/dtypes (restore)."""
+    return jax.tree.map(lambda x: np.zeros(x.shape, x.dtype)
+                        if hasattr(x, "shape") else x, state)

@@ -1,0 +1,208 @@
+"""SpotTrainer — the paper's Fig. 1 workflow as a training-cluster loop.
+
+One run = the life of a long-running workload on a spot Scale Set:
+
+    provision instance → restore most-recent-valid checkpoint (or cold-start)
+    → step loop [periodic ckpts | stage ckpts | eviction notice → termination
+    ckpt] → instance dies → replacement provisions → restore → ... → complete.
+
+The *workload* is a staged training job — `n_stages` plays metaSPAdes'
+k-mer-stage role: the application-specific policy may checkpoint only at stage
+boundaries, the transparent policy at any step. Stage completion times are
+reported exactly as Table I reports per-K times (on the surviving lineage:
+a crossing rolled back by an eviction doesn't count).
+
+Two time modes:
+  * wall mode (clock=WallClock, step_time_s=None): every train step really
+    executes (jit) and durations are physical — integration tests, small runs.
+  * virtual mode (clock=VirtualClock, step_time_s=x): steps still execute (the
+    state evolution and checkpoint bytes are real) but the clock advances by a
+    modeled per-step cost, and checkpoint/restore costs come from the
+    coordinator's TimeModel — replaying the paper's multi-hour schedules in
+    seconds, deterministically.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+from ..core.clock import Clock, VirtualClock
+from ..core.coordinator import Signal, SpotOnCoordinator
+from ..core.spot_sim import ScaleSet
+from ..data import PipelineState, TokenPipeline
+from ..models.config import ModelConfig
+from ..optim import AdamWConfig
+from .train_step import init_train_state, make_train_step, state_template
+
+
+@dataclass
+class TrainJob:
+    cfg: ModelConfig
+    opt: AdamWConfig
+    total_steps: int
+    n_stages: int = 5                      # metaSPAdes used 5 k-mer stages
+    batch: int = 8
+    seq_len: int = 64
+    seed: int = 0
+    remat: str = "none"
+    microbatches: int = 1
+
+    def stage_boundaries(self) -> list[int]:
+        return [math.ceil(self.total_steps * (i + 1) / self.n_stages)
+                for i in range(self.n_stages)]
+
+
+@dataclass
+class RunReport:
+    completed: bool
+    total_time_s: float
+    stage_times_s: list[float]             # per-stage durations (Table I rows)
+    steps_executed: int                    # including rolled-back work
+    lost_steps: int
+    restores: int
+    cold_starts: int
+    instances_used: int
+    evictions_seen: int
+    final_loss: float
+    coordinator: dict
+    extra: dict = field(default_factory=dict)
+
+
+class SpotTrainer:
+    def __init__(self, job: TrainJob, coordinator: SpotOnCoordinator,
+                 pool: ScaleSet, clock: Clock, *,
+                 step_time_s: float | None = None,
+                 max_sessions: int = 200):
+        self.job = job
+        self.coord = coordinator
+        self.pool = pool
+        self.clock = clock
+        self.step_time_s = step_time_s
+        self.max_sessions = max_sessions
+        cfg = job.cfg
+        self.pipeline = TokenPipeline(
+            vocab_size=cfg.vocab_size, batch=job.batch, seq_len=job.seq_len,
+            seed=job.seed,
+            embed_dim=None if cfg.embed_inputs else cfg.d_model,
+            embed_dtype=np.dtype("float32") if cfg.dtype == "float32"
+            else np.dtype("float32"))
+        self._step_fn = jax.jit(make_train_step(
+            cfg, job.opt, remat=job.remat, microbatches=job.microbatches))
+
+    # -----------------------------------------------------------------------
+
+    def _fresh_state(self):
+        return init_train_state(self.job.cfg, self.job.opt, seed=self.job.seed)
+
+    def run(self) -> RunReport:
+        job = self.job
+        clock = self.clock
+        t_start = clock.now()
+        boundaries = job.stage_boundaries()
+        stage_cross_time: dict[int, float] = {}   # stage idx -> crossing time
+        steps_executed = 0
+        lost_steps = 0
+        cold_starts = 0
+        sessions = 0
+        last_session_max_step = 0
+        final_loss = float("nan")
+        template = state_template(self._fresh_state())
+        self.pool.start()
+        completed = False
+
+        while not completed and sessions < self.max_sessions:
+            sessions += 1
+            inst = self.pool.wait_for_instance()
+            self.coord.attach_instance(inst.metadata, inst.name)
+            restored = self.coord.restore_latest(template)
+            if restored is not None:
+                state, _man = restored
+                step = int(np.asarray(state["step"]))
+            else:
+                state = self._fresh_state()
+                step = 0
+                cold_starts += 1
+            # work executed beyond this restore point is lost
+            if last_session_max_step > step:
+                lost_steps += last_session_max_step - step
+            # crossings beyond the restore point are invalidated (rolled back)
+            for si in [s for s, _ in list(stage_cross_time.items())
+                       if boundaries[s] > step]:
+                stage_cross_time.pop(si, None)
+
+            preempted = False
+            while step < job.total_steps:
+                if self.pool.tick() is None:       # platform killed the VM
+                    break
+                batch = self.pipeline.batch_at(
+                    int(np.asarray(state["data"]["next_batch_index"])))
+                t0 = clock.now()
+                state, metrics = self._step_fn(state, batch)
+                jax.block_until_ready(metrics["loss"])
+                if self.step_time_s is not None and isinstance(clock, VirtualClock):
+                    clock.advance(self.step_time_s)
+                dur = clock.now() - t0
+                step += 1
+                steps_executed += 1
+                final_loss = float(np.asarray(metrics["loss"]))
+                # stage boundary bookkeeping + app-specific checkpoint hook
+                for si, b in enumerate(boundaries):
+                    if step == b:
+                        stage_cross_time[si] = clock.now()
+                        self.coord.on_stage_end(si, step, state)
+                sig = self.coord.on_step_end(step, lambda s=state: s,
+                                             step_duration_s=dur)
+                if sig is Signal.PREEMPTING:
+                    preempted = True
+                    break
+                if sig is Signal.STRAGGLER:
+                    inst.terminate()
+                    break
+            last_session_max_step = step
+            if step >= job.total_steps:
+                completed = True
+                break
+            if preempted:       # ride the notice out until the platform kills us
+                while self.pool.tick() is not None:
+                    clock.sleep(1.0)
+            self.coord.detach()
+
+        self.coord.flush()
+        self.pool.shutdown()
+        total = clock.now() - t_start
+        # per-stage durations on the surviving lineage
+        stage_times = []
+        prev = t_start
+        for si in range(job.n_stages):
+            t = stage_cross_time.get(si)
+            if t is None:
+                stage_times.append(float("nan"))
+            else:
+                stage_times.append(t - prev)
+                prev = t
+        st = self.coord.stats
+        return RunReport(
+            completed=completed,
+            total_time_s=total,
+            stage_times_s=stage_times,
+            steps_executed=steps_executed,
+            lost_steps=lost_steps,
+            restores=st.restores,
+            cold_starts=cold_starts,
+            instances_used=self.pool.instances_created,
+            evictions_seen=self.pool.evictions_announced,
+            final_loss=final_loss,
+            coordinator={
+                "periodic_ckpts": st.periodic_ckpts,
+                "termination_ckpts": st.termination_ckpts,
+                "termination_failures": st.termination_failures,
+                "stage_ckpts": st.stage_ckpts,
+                "ckpt_bytes_written": st.ckpt_bytes_written,
+                "ckpt_time_s": st.ckpt_time_s,
+            },
+        )

@@ -1,0 +1,11 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS device-count override here — smoke
+tests and benches must see the real single CPU device. Multi-device sharding
+tests spawn subprocesses with their own XLA_FLAGS (test_sharded_elastic.py)."""
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,171 @@
+"""Checkpoint substrate: serialization, atomic commit, corruption fallback,
+retention, async writer, termination-checkpoint semantics."""
+
+import os
+import threading
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import (AsyncCheckpointer, CheckpointStore,
+                              extract_snapshot)
+from repro.checkpoint import serialize as ser
+from repro.checkpoint import manifest as mf
+
+
+def small_state(step=3):
+    return {
+        "params": {"w": jnp.arange(32, dtype=jnp.bfloat16).reshape(4, 8),
+                   "b": jnp.ones((8,), jnp.float32)},
+        "opt": {"mu": {"w": jnp.full((4, 8), 0.25, jnp.float32)},
+                "count": jnp.asarray(step, jnp.int32)},
+        "step": step,
+        "rng": np.array([7, 9], np.uint32),
+    }
+
+
+def template():
+    s = small_state()
+    return jax.tree.map(lambda x: np.zeros(x.shape, x.dtype)
+                        if hasattr(x, "shape") else x, s)
+
+
+class TestSerialize:
+    def test_roundtrip_dtypes(self, tmp_path):
+        arrays = {
+            "bf16": np.arange(24, dtype=np.float32).reshape(2, 3, 4),
+            "f32": np.random.default_rng(0).standard_normal((5, 7)).astype(np.float32),
+            "i32": np.arange(-5, 5, dtype=np.int32),
+            "u8": np.arange(16, dtype=np.uint8),
+        }
+        import ml_dtypes
+        arrays["bf16"] = arrays["bf16"].astype(ml_dtypes.bfloat16)
+        pend = [ser.encode_tensor(k, v, codec="zstd") for k, v in arrays.items()]
+        path = tmp_path / "x.spot"
+        ser.write_shard_file(path, pend)
+        r = ser.ShardFileReader(path)
+        for k, v in arrays.items():
+            got = r.read(k)
+            assert got.dtype == v.dtype
+            np.testing.assert_array_equal(got, v)
+
+    def test_int8_codec_bounded_error(self):
+        x = np.linspace(-3, 3, 1000, dtype=np.float32)
+        p = ser.encode_tensor("m", x, codec="int8")
+        buf = p.payload
+        dec = ser._decode(buf, p.record)
+        assert np.max(np.abs(dec - x)) <= (3.0 / 127.0) * 0.5 + 1e-6
+
+    def test_crc_detects_corruption(self, tmp_path):
+        p = ser.encode_tensor("t", np.ones((64,), np.float32))
+        path = tmp_path / "c.spot"
+        ser.write_shard_file(path, [p])
+        raw = bytearray(open(path, "rb").read())
+        raw[-5] ^= 0xFF  # flip a payload byte
+        open(path, "wb").write(bytes(raw))
+        r = ser.ShardFileReader(path)
+        with pytest.raises(IOError):
+            r.read("t")
+
+
+class TestAtomicCommit:
+    @pytest.mark.parametrize("phase", ["shards_written", "manifest_written"])
+    def test_crash_before_rename_invisible(self, tmp_path, phase):
+        def injector(p):
+            if p == phase:
+                raise RuntimeError("killed mid-eviction")
+        store = CheckpointStore(str(tmp_path), fault_injector=injector)
+        with pytest.raises(RuntimeError):
+            store.save(1, small_state())
+        assert store.committed_steps() == []
+        clean = CheckpointStore(str(tmp_path))
+        assert clean.latest_valid() is None
+
+    def test_crash_after_rename_before_marker_invisible(self, tmp_path):
+        def injector(p):
+            if p == "renamed":
+                raise RuntimeError("killed")
+        store = CheckpointStore(str(tmp_path), fault_injector=injector)
+        with pytest.raises(RuntimeError):
+            store.save(1, small_state())
+        # dir exists but no COMMITTED marker -> not restorable
+        assert CheckpointStore(str(tmp_path)).committed_steps() == []
+
+    def test_fallback_to_older_on_corruption(self, tmp_path):
+        store = CheckpointStore(str(tmp_path), validate_on_restore=True,
+                                retention=10)
+        store.save(1, small_state(1))
+        store.save(2, small_state(2))
+        # corrupt newest shard payload
+        d2 = os.path.join(str(tmp_path), mf.step_dirname(2))
+        shard = os.path.join(d2, "shard_p000.spot")
+        raw = bytearray(open(shard, "rb").read())
+        raw[-3] ^= 0xFF
+        open(shard, "wb").write(bytes(raw))
+        state, man = store.restore(template())
+        assert man.step == 1
+        assert state["step"] == 1
+
+    def test_restore_roundtrip_exact(self, tmp_path):
+        store = CheckpointStore(str(tmp_path))
+        s = small_state(9)
+        store.save(9, s, extra={"stage": 2})
+        got, man = store.restore(template())
+        assert man.extra["stage"] == 2
+        for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(s)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_retention_gc(self, tmp_path):
+        store = CheckpointStore(str(tmp_path), retention=2)
+        for i in range(5):
+            store.save(i, small_state(i))
+        assert store.committed_steps() == [3, 4]
+
+
+class TestAsync:
+    def test_async_then_restore(self, tmp_path):
+        store = CheckpointStore(str(tmp_path))
+        ac = AsyncCheckpointer(store)
+        ac.save_async(5, small_state(5))
+        ac.wait_until_finished()
+        state, man = store.restore(template())
+        assert man.step == 5 and man.kind == "transparent"
+        ac.close()
+
+    def test_urgent_supersedes_queued(self, tmp_path):
+        store = CheckpointStore(str(tmp_path))
+        ac = AsyncCheckpointer(store, max_pending=4)
+        ac.save_async(1, small_state(1))
+        info = ac.save_urgent(2, small_state(2))
+        assert info.kind == "termination" and info.step == 2
+        ac.close()
+        assert 2 in store.committed_steps()
+
+    def test_error_surfaced(self, tmp_path):
+        store = CheckpointStore(str(tmp_path))
+        boom = {"n": 0}
+
+        def injector(phase):
+            if phase == "shards_written" and boom["n"] == 0:
+                boom["n"] = 1
+                raise IOError("nfs died")
+        store.fault_injector = injector
+        ac = AsyncCheckpointer(store)
+        ac.save_async(1, small_state(1))
+        with pytest.raises(RuntimeError):
+            ac.wait_until_finished()
+        ac.close()
+
+
+class TestSnapshot:
+    def test_extract_is_host_copy(self):
+        s = small_state()
+        snap = extract_snapshot(s, step=3)
+        assert snap.nbytes > 0
+        assert set(snap.leaves) == {
+            "params/w", "params/b", "opt/mu/w", "opt/count", "step", "rng"}
+        lp = snap.leaves["step"]
+        assert lp.is_scalar_py and lp.py_type == "int"

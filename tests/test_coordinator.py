@@ -1,0 +1,112 @@
+"""SpotOnCoordinator policy semantics — the paper's §III-A contract."""
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointStore
+from repro.core import (CheckpointPolicy, Mode, Signal, SimulatedMetadataService,
+                        SpotOnCoordinator, TimeModel, VirtualClock)
+
+
+def state(step):
+    return {"w": np.full((16,), float(step), np.float32), "step": step}
+
+
+def make(tmp_path, policy, clock=None, tm=TimeModel()):
+    clock = clock or VirtualClock()
+    store = CheckpointStore(str(tmp_path), time_fn=clock.now)
+    coord = SpotOnCoordinator(store, policy, clock, time_model=tm)
+    md = SimulatedMetadataService(clock, "vm-0")
+    coord.attach_instance(md, "vm-0")
+    return coord, md, clock, store
+
+
+class TestTransparent:
+    def test_periodic_cadence(self, tmp_path):
+        coord, md, clock, store = make(tmp_path, CheckpointPolicy.transparent(100.0))
+        for step in range(1, 31):
+            clock.advance(10.0)
+            coord.on_step_end(step, lambda s=step: state(s))
+        coord.flush()
+        assert coord.stats.periodic_ckpts == pytest.approx(3, abs=1)
+
+    def test_termination_checkpoint_on_preempt(self, tmp_path):
+        coord, md, clock, store = make(tmp_path, CheckpointPolicy.transparent(1e9))
+        md.simulate_eviction()
+        clock.advance(2.0)
+        sig = coord.on_step_end(7, lambda: state(7))
+        assert sig is Signal.PREEMPTING
+        assert coord.stats.termination_ckpts == 1
+        got, man = store.restore(state(0))
+        assert man.kind == "termination" and got["step"] == 7
+
+    def test_termination_missing_window_fails_gracefully(self, tmp_path):
+        # write cost exceeds the notice -> opportunistic failure, not crash
+        tm = TimeModel(write_bw=1.0, latency_s=1000.0)   # absurdly slow NFS
+        coord, md, clock, store = make(tmp_path, CheckpointPolicy.transparent(1e9),
+                                       tm=tm)
+        md.simulate_eviction()
+        clock.advance(1.0)
+        sig = coord.on_step_end(3, lambda: state(3))
+        assert sig is Signal.PREEMPTING
+        assert coord.stats.termination_failures == 1
+
+    def test_same_event_handled_once(self, tmp_path):
+        coord, md, clock, store = make(tmp_path, CheckpointPolicy.transparent(1e9))
+        md.simulate_eviction()
+        clock.advance(2.0)
+        assert coord.on_step_end(1, lambda: state(1)) is Signal.PREEMPTING
+        clock.advance(2.0)
+        assert coord.on_step_end(2, lambda: state(2)) is Signal.CONTINUE
+
+
+class TestApplication:
+    def test_cannot_checkpoint_on_demand(self, tmp_path):
+        """Paper: 'application-specific checkpointing cannot be taken on
+        demand' — a preempt produces NO termination checkpoint."""
+        coord, md, clock, store = make(tmp_path, CheckpointPolicy.application())
+        md.simulate_eviction()
+        clock.advance(2.0)
+        sig = coord.on_step_end(9, lambda: state(9))
+        assert sig is Signal.PREEMPTING
+        assert coord.stats.termination_ckpts == 0
+        assert store.committed_steps() == []
+
+    def test_stage_boundary_checkpoints(self, tmp_path):
+        coord, md, clock, store = make(tmp_path, CheckpointPolicy.application())
+        coord.on_stage_end(0, 100, state(100))
+        assert coord.stats.stage_ckpts == 1
+        got, man = store.restore(state(0))
+        assert man.kind == "application" and man.extra["stage"] == 0
+
+    def test_no_periodic(self, tmp_path):
+        coord, md, clock, store = make(tmp_path, CheckpointPolicy.application())
+        for step in range(1, 50):
+            clock.advance(60.0)
+            coord.on_step_end(step, lambda s=step: state(s))
+        coord.flush()
+        assert coord.stats.periodic_ckpts == 0
+
+
+class TestOff:
+    def test_nothing_saved(self, tmp_path):
+        coord, md, clock, store = make(tmp_path, CheckpointPolicy.off())
+        md.simulate_eviction()
+        clock.advance(2.0)
+        assert coord.on_step_end(1, lambda: state(1)) is Signal.PREEMPTING
+        coord.on_stage_end(0, 1, state(1))
+        coord.flush()
+        assert store.committed_steps() == []
+
+
+class TestRestore:
+    def test_restore_latest_valid(self, tmp_path):
+        coord, md, clock, store = make(tmp_path, CheckpointPolicy.transparent(1.0))
+        store.save(4, state(4))
+        store.save(8, state(8))
+        got, man = coord.restore_latest(state(0))
+        assert got["step"] == 8 and coord.stats.restores == 1
+
+    def test_restore_none_when_empty(self, tmp_path):
+        coord, md, clock, store = make(tmp_path, CheckpointPolicy.transparent(1.0))
+        assert coord.restore_latest(state(0)) is None

@@ -1,0 +1,152 @@
+"""Spot-cloud simulator: metadata-service schema fidelity, instance lifecycle,
+scale-set replacement, eviction schedules, cost model (paper prices)."""
+
+import itertools
+
+import numpy as np
+import pytest
+
+from repro.core import (AZURE_D8S_V3, CostAccountant, NoEviction,
+                        PeriodicEviction, PoissonEviction, ScaleSet,
+                        SimulatedMetadataService, SpotInstance,
+                        StragglerDetector, TraceEviction, VirtualClock,
+                        first_preempt)
+from repro.core.spot_sim import InstanceState
+
+
+class TestMetadataService:
+    def test_document_shape_matches_azure(self):
+        clock = VirtualClock()
+        md = SimulatedMetadataService(clock, "vm-0001")
+        doc = md.get_scheduled_events()
+        assert set(doc) == {"DocumentIncarnation", "Events"}
+        assert doc["Events"] == []
+        ev = md.simulate_eviction()
+        doc = md.get_scheduled_events()
+        e = doc["Events"][0]
+        assert set(e) == {"EventId", "EventType", "ResourceType", "Resources",
+                          "EventStatus", "NotBefore", "EventSource",
+                          "Description"}
+        assert e["EventType"] == "Preempt"
+        assert e["ResourceType"] == "VirtualMachine"
+        assert e["Resources"] == ["vm-0001"]
+        assert e["EventStatus"] == "Scheduled"
+
+    def test_minimum_30s_notice(self):
+        clock = VirtualClock(start=100.0)
+        md = SimulatedMetadataService(clock, "vm")
+        ev = md.schedule_preempt(notice_s=1.0)  # below Azure's floor
+        assert ev.not_before - clock.now() >= 30.0
+
+    def test_incarnation_increments(self):
+        md = SimulatedMetadataService(VirtualClock(), "vm")
+        inc0 = md.get_scheduled_events()["DocumentIncarnation"]
+        md.simulate_eviction()
+        assert md.get_scheduled_events()["DocumentIncarnation"] == inc0 + 1
+
+    def test_first_preempt_filters_by_resource(self):
+        md = SimulatedMetadataService(VirtualClock(), "vm-a")
+        md.simulate_eviction()
+        doc = md.get_scheduled_events()
+        assert first_preempt(doc, "vm-a") is not None
+        assert first_preempt(doc, "vm-b") is None
+
+
+class TestInstanceLifecycle:
+    def test_preempt_then_terminate_at_notbefore(self):
+        clock = VirtualClock()
+        inst = SpotInstance(name="vm", clock=clock)
+        inst.boot()
+        inst.announce_preemption(notice_s=30.0)
+        assert inst.state is InstanceState.EVICTING and inst.alive
+        clock.advance(29.0)
+        inst.tick()
+        assert inst.alive
+        clock.advance(2.0)
+        inst.tick()
+        assert inst.state is InstanceState.TERMINATED
+        assert inst.lifetime_s() == pytest.approx(31.0)
+
+
+class TestScaleSet:
+    def test_replacement_after_eviction(self):
+        clock = VirtualClock()
+        pool = ScaleSet(clock=clock, schedule=PeriodicEviction(100.0),
+                        provisioning_delay_s=20.0, notice_s=30.0)
+        pool.start()
+        first = pool.wait_for_instance()
+        clock.advance(101.0)
+        pool.tick()             # preemption announced
+        assert first.state is InstanceState.EVICTING
+        clock.advance(31.0)
+        assert pool.tick() is None   # dead, replacement provisioning
+        second = pool.wait_for_instance()
+        assert second.name != first.name
+        assert pool.instances_created == 2
+        assert pool.evictions_announced == 1
+
+    def test_ondemand_never_evicted(self):
+        clock = VirtualClock()
+        pool = ScaleSet(clock=clock, schedule=PeriodicEviction(50.0),
+                        kind="ondemand")
+        pool.start()
+        inst = pool.wait_for_instance()
+        clock.advance(1000.0)
+        assert pool.tick() is inst
+
+    def test_accounting(self):
+        clock = VirtualClock()
+        acct = CostAccountant(AZURE_D8S_V3)
+        pool = ScaleSet(clock=clock, schedule=NoEviction(), accountant=acct)
+        pool.start()
+        pool.wait_for_instance()
+        clock.advance(3600.0)
+        pool.tick()
+        pool.shutdown()
+        assert acct.summary(clock.now())["spot_usd"] == pytest.approx(0.076)
+
+
+class TestSchedules:
+    def test_periodic(self):
+        times = list(itertools.islice(PeriodicEviction(60.0).eviction_times(10.0), 3))
+        assert times == [70.0, 130.0, 190.0]
+
+    def test_poisson_mean(self):
+        it = PoissonEviction(100.0, seed=1).eviction_times(0.0)
+        times = list(itertools.islice(it, 500))
+        gaps = np.diff([0.0] + times)
+        assert abs(np.mean(gaps) - 100.0) / 100.0 < 0.15
+
+    def test_trace(self):
+        it = TraceEviction((5.0, 9.0)).eviction_times(100.0)
+        assert list(it) == [105.0, 109.0]
+
+
+class TestCostModel:
+    def test_paper_discount(self):
+        # the paper's headline: spot price cut alone saves ~77-80%
+        assert AZURE_D8S_V3.spot_discount == pytest.approx(0.8, abs=0.01)
+
+    def test_storage_pricing(self):
+        acct = CostAccountant(AZURE_D8S_V3)
+        acct.provision_storage(100.0, now=0.0)      # 100 GiB
+        month = 30 * 24 * 3600.0
+        assert acct.storage_cost(month) == pytest.approx(16.0, rel=1e-6)
+
+
+class TestStraggler:
+    def test_fires_only_on_persistent_slowness(self):
+        det = StragglerDetector(factor=2.0, min_samples=10, patience=3)
+        fired = [det.observe(1.0) for _ in range(20)]
+        assert not any(fired)
+        assert not det.observe(5.0)
+        assert not det.observe(5.0)
+        assert det.observe(5.0)   # third consecutive slow step
+
+    def test_single_blip_tolerated(self):
+        det = StragglerDetector(factor=2.0, min_samples=5, patience=3)
+        for _ in range(10):
+            det.observe(1.0)
+        assert not det.observe(9.0)
+        for _ in range(3):
+            assert not det.observe(1.0)

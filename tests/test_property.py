@@ -1,0 +1,104 @@
+"""Property-based tests (hypothesis) on system invariants."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import serialize as ser
+from repro.core.cost import AZURE_D8S_V3, CostAccountant
+from repro.models.moe import router_capacity, top_k_routing
+from repro.models.config import MoEConfig
+from repro.data import TokenPipeline
+from repro.optim import AdamWConfig, lr_at
+
+DTYPES = st.sampled_from(["float32", "int32", "uint8", "bfloat16"])
+SHAPES = st.lists(st.integers(1, 7), min_size=0, max_size=3).map(tuple)
+
+
+@settings(max_examples=40, deadline=None)
+@given(shape=SHAPES, dtype=DTYPES, codec=st.sampled_from(["raw", "zstd"]),
+       seed=st.integers(0, 2**31 - 1))
+def test_serialize_roundtrip(tmp_path_factory, shape, dtype, codec, seed):
+    rng = np.random.default_rng(seed)
+    np_dtype = ser.name_to_dtype(dtype)
+    if dtype in ("float32", "bfloat16"):
+        arr = rng.standard_normal(shape).astype(np_dtype)
+    else:
+        arr = rng.integers(0, 100, size=shape).astype(np_dtype)
+    p = ser.encode_tensor("x", arr, codec=codec)
+    dec = ser._decode(p.payload, p.record)
+    assert dec.dtype == arr.dtype and dec.shape == arr.shape
+    np.testing.assert_array_equal(dec, arr)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n_experts=st.sampled_from([4, 8, 16]), top_k=st.integers(1, 4),
+       tokens=st.integers(1, 64), seed=st.integers(0, 1000))
+def test_moe_routing_invariants(n_experts, top_k, tokens, seed):
+    top_k = min(top_k, n_experts)
+    cfg = MoEConfig(n_experts=n_experts, top_k=top_k, d_expert=8,
+                    capacity_factor=1.25)
+    logits = jax.random.normal(jax.random.key(seed), (tokens, n_experts))
+    dispatch, combine, aux = top_k_routing(logits, cfg)
+    C = router_capacity(tokens, cfg)
+    d = np.asarray(dispatch)
+    c = np.asarray(combine)
+    # no expert queue overflows its capacity
+    load = d.sum(axis=(0, 2))
+    assert (d.sum(axis=0).max(initial=0.0) <= C + 1e-6)
+    # each (token, k) occupies at most one slot; combine weights <= 1 per token
+    assert (d.reshape(tokens, -1).sum(axis=1) <= cfg.top_k + 1e-6).all()
+    assert (c.reshape(tokens, -1).sum(axis=1) <= 1.0 + 1e-5).all()
+    # combine weight only where dispatched
+    assert (c[d == 0.0] == 0.0).all()
+    assert np.isfinite(float(aux))
+
+
+@settings(max_examples=20, deadline=None)
+@given(seconds=st.lists(st.floats(0.0, 1e5), min_size=1, max_size=10))
+def test_cost_accountant_additivity(seconds):
+    a = CostAccountant(AZURE_D8S_V3)
+    for s in seconds:
+        a.record_instance("spot", s)
+    b = CostAccountant(AZURE_D8S_V3)
+    b.record_instance("spot", sum(seconds))
+    assert a.compute_cost()["spot_usd"] == pytest.approx(
+        b.compute_cost()["spot_usd"], rel=1e-9, abs=1e-12)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 100), idx=st.integers(0, 500),
+       vocab=st.sampled_from([16, 1000, 65536]))
+def test_pipeline_pure_function_of_index(seed, idx, vocab):
+    p1 = TokenPipeline(vocab_size=vocab, batch=2, seq_len=8, seed=seed)
+    p2 = TokenPipeline(vocab_size=vocab, batch=2, seq_len=8, seed=seed)
+    a, b = p1.batch_at(idx), p2.batch_at(idx)
+    np.testing.assert_array_equal(a["inputs"], b["inputs"])
+    assert a["inputs"].max() < vocab and a["inputs"].min() >= 0
+
+
+@settings(max_examples=20, deadline=None)
+@given(step=st.integers(0, 20000))
+def test_lr_schedule_bounds(step):
+    cfg = AdamWConfig(peak_lr=1e-3, warmup_steps=100, total_steps=10000,
+                      min_lr_frac=0.1)
+    lr = float(lr_at(cfg, step))
+    assert 0.0 <= lr <= cfg.peak_lr * (1 + 1e-6)
+    if step >= cfg.total_steps:
+        assert lr == pytest.approx(cfg.peak_lr * cfg.min_lr_frac, rel=1e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(1, 30), retention=st.integers(1, 5))
+def test_store_retention_invariant(tmp_path_factory, n, retention):
+    from repro.checkpoint import CheckpointStore
+    td = tmp_path_factory.mktemp("ret")
+    store = CheckpointStore(str(td), retention=retention)
+    for i in range(n):
+        store.save(i, {"x": np.full((4,), i, np.float32)})
+    steps = store.committed_steps()
+    assert len(steps) == min(n, retention)
+    assert steps == sorted(range(n))[-retention:]

@@ -1,0 +1,69 @@
+"""Sharded checkpoint + elastic restore across meshes. Needs >1 device, so it
+runs in a subprocess with XLA_FLAGS=--xla_force_host_platform_device_count=8
+(never set globally — see conftest)."""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import sys
+    import numpy as np
+    import jax, jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.checkpoint import CheckpointStore
+
+    td = sys.argv[1]
+    mesh = jax.make_mesh((4, 2), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    sh = NamedSharding(mesh, P("data", "model"))
+    w = jax.device_put(jnp.arange(256, dtype=jnp.bfloat16).reshape(16, 16), sh)
+    state = {"params": {"w": w, "b": jnp.ones((16,), jnp.float32)},
+             "opt": {"mu": {"w": w.astype(jnp.float32) * 0.5}},
+             "step": 11}
+    store = CheckpointStore(td, quantize_moments=False)
+    info = store.save(11, state, mesh_info={"shape": [4, 2]})
+    assert info.nbytes > 0
+
+    # 1. restore onto a DIFFERENT mesh shape (2x4) with different specs
+    mesh2 = jax.make_mesh((2, 4), ("data", "model"),
+                          axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    sh2 = NamedSharding(mesh2, P(None, "model"))
+    tpl = {"params": {"w": jax.ShapeDtypeStruct((16, 16), jnp.bfloat16, sharding=sh2),
+                      "b": jnp.zeros((16,), jnp.float32)},
+           "opt": {"mu": {"w": jnp.zeros((16, 16), jnp.float32)}},
+           "step": 0}
+    got, man = store.restore(tpl)
+    assert np.array_equal(np.asarray(got["params"]["w"]), np.asarray(w)), "remesh w"
+    assert got["step"] == 11
+
+    # 2. restore onto FEWER devices (half the 'pod' lost)
+    mesh3 = jax.make_mesh((2, 2), ("data", "model"),
+                          axis_types=(jax.sharding.AxisType.Auto,) * 2,
+                          devices=jax.devices()[:4])
+    sh3 = NamedSharding(mesh3, P("data", "model"))
+    tpl3 = dict(tpl)
+    tpl3 = {"params": {"w": jax.ShapeDtypeStruct((16, 16), jnp.bfloat16, sharding=sh3),
+                       "b": jnp.zeros((16,), jnp.float32)},
+            "opt": {"mu": {"w": jnp.zeros((16, 16), jnp.float32)}},
+            "step": 0}
+    got3, _ = store.restore(tpl3)
+    assert np.array_equal(np.asarray(got3["params"]["w"]), np.asarray(w)), "elastic w"
+    assert np.allclose(np.asarray(got3["opt"]["mu"]["w"]),
+                       np.asarray(w, np.float32) * 0.5)
+    print("ELASTIC_OK")
+""")
+
+
+def test_elastic_restore_across_meshes(tmp_path):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    proc = subprocess.run([sys.executable, "-c", SCRIPT, str(tmp_path)],
+                          capture_output=True, text=True, env=env, timeout=300)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "ELASTIC_OK" in proc.stdout
