@@ -8,9 +8,9 @@ from dataclasses import dataclass
 
 from repro.checkpoint import CheckpointStore
 from repro.configs import get_smoke_config
-from repro.core import (AZURE_D8S_V3, CheckpointPolicy, CostAccountant,
-                        NoEviction, PeriodicEviction, ScaleSet,
-                        SpotOnCoordinator, TimeModel, VirtualClock)
+from repro.core import (CheckpointPolicy, CostAccountant, NoEviction,
+                        PeriodicEviction, SpotOnCoordinator, TimeModel,
+                        VirtualClock, get_provider)
 from repro.optim import AdamWConfig
 from repro.train import SpotTrainer, TrainJob
 
@@ -35,11 +35,13 @@ class Row:
     report: object
     cost: dict
     instance_kind: str = "spot"
+    provider: str = "azure"
 
     def csv(self) -> str:
         r = self.report
         stage = ",".join(f"{t:.0f}" for t in r.stage_times_s)
-        return (f"{self.label},{self.mode},{self.eviction_s or 0:.0f},"
+        return (f"{self.label},{self.provider},{self.mode},"
+                f"{self.eviction_s or 0:.0f},"
                 f"{r.completed},{r.total_time_s:.0f},{stage},"
                 f"{r.lost_steps},{r.restores},"
                 f"{r.coordinator['termination_ckpts']},"
@@ -48,23 +50,24 @@ class Row:
 
 def run_row(label: str, *, mode: str, eviction_s: float | None,
             periodic_s: float = 900.0, instance_kind: str = "spot",
+            provider: str = "azure",
             arch: str = "phi3_mini_3p8b", total_steps: int = TOTAL_STEPS,
             step_time_s: float = STEP_TIME_S, seed: int = 0,
             time_model: TimeModel | None = None,
             quantize_moments: bool = False) -> Row:
     clock = VirtualClock()
-    acct = CostAccountant(AZURE_D8S_V3)
+    prov = get_provider(provider)
+    acct = CostAccountant(prov.prices)
     sched = PeriodicEviction(eviction_s) if eviction_s else NoEviction()
-    pool = ScaleSet(clock=clock, schedule=sched, accountant=acct,
-                    provisioning_delay_s=120.0, notice_s=30.0,
-                    kind=instance_kind)
+    pool = prov.make_pool(clock, sched, acct, provisioning_delay_s=120.0,
+                          kind=instance_kind)
     td = tempfile.mkdtemp(prefix="spoton_bench_")
     store = CheckpointStore(td, time_fn=clock.now,
                             quantize_moments=quantize_moments)
     policy = {"off": CheckpointPolicy.off(),
               "application": CheckpointPolicy.application(),
               "transparent": CheckpointPolicy.transparent(periodic_s)}[mode]
-    coord = SpotOnCoordinator(store, policy, clock,
+    coord = SpotOnCoordinator(store, policy, clock, provider=prov,
                               time_model=time_model or TimeModel())
     cfg = get_smoke_config(arch)
     job = TrainJob(cfg=cfg, opt=AdamWConfig(total_steps=total_steps),
@@ -78,9 +81,10 @@ def run_row(label: str, *, mode: str, eviction_s: float | None,
     acct.provision_storage(max(store.total_bytes(), 1) / 2**30, clock.now())
     return Row(label=label, mode=mode, eviction_s=eviction_s,
                periodic_s=periodic_s, report=report,
-               cost=acct.summary(clock.now()), instance_kind=instance_kind)
+               cost=acct.summary(clock.now()), instance_kind=instance_kind,
+               provider=prov.name)
 
 
-CSV_HEADER = ("label,mode,eviction_s,completed,total_s,"
+CSV_HEADER = ("label,provider,mode,eviction_s,completed,total_s,"
               + ",".join(f"stage{i}_s" for i in range(N_STAGES))
               + ",lost_steps,restores,termination_ckpts,total_usd")

@@ -7,6 +7,7 @@ Sections:
   table1   — paper Table I (8 rows, virtual-time replay)
   fig2     — paper Fig. 2 cost comparison
   fig3     — paper Fig. 3 app vs transparent time
+  fleet    — beyond-paper: per-provider (azure/aws/gcp) + mixed-fleet sweep
   term     — beyond-paper: termination-ckpt window feasibility (+int8 moments)
   micro    — microbenchmarks: checkpoint save/restore/extract throughput
   roofline — roofline table from the dry-run JSONs (if present)
@@ -64,8 +65,8 @@ def micro():
 
 
 def main() -> None:
-    want = set(sys.argv[1:]) or {"table1", "fig2", "fig3", "term", "micro",
-                                 "roofline"}
+    want = set(sys.argv[1:]) or {"table1", "fig2", "fig3", "fleet", "term",
+                                 "micro", "roofline"}
     if "table1" in want:
         section("Table I: execution time under Spot-on (virtual-time replay)")
         from . import table1
@@ -78,6 +79,10 @@ def main() -> None:
         section("Fig 3: app-native vs transparent checkpointing time")
         from . import fig3_time
         fig3_time.main()
+    if "fleet" in want:
+        section("fleet: per-provider + heterogeneous multi-cloud fleet")
+        from . import fleet_sweep
+        fleet_sweep.main()
     if "term" in want:
         section("E5: termination-checkpoint window feasibility")
         from . import term_ckpt_window

@@ -118,6 +118,9 @@ class AsyncCheckpointer:
         self._raise_pending_error()
 
     def close(self) -> None:
-        self.wait_until_finished()
-        self._queue.put(None)
-        self._thread.join(timeout=10)
+        try:
+            self.wait_until_finished()
+        finally:
+            # always stop the worker, even when surfacing a pending error
+            self._queue.put(None)
+            self._thread.join(timeout=10)

@@ -18,6 +18,7 @@ from __future__ import annotations
 
 import os
 import shutil
+import threading
 import time
 import uuid
 from dataclasses import dataclass
@@ -46,6 +47,7 @@ class CheckpointStore:
         compress: bool = True,
         quantize_moments: bool = False,
         time_fn: Callable[[], float] = time.time,
+        tags: dict | None = None,
         fault_injector: Callable[[str], None] | None = None,
     ):
         self.root = root
@@ -54,9 +56,19 @@ class CheckpointStore:
         self.compress = compress
         self.quantize_moments = quantize_moments
         self.time_fn = time_fn
+        # store-level provenance (e.g. {"provider": "aws", "fleet": "f0"})
+        # merged under every manifest's extras; per-save extras win on clash.
+        self.tags = dict(tags or {})
         # test hook: called between commit phases; raising simulates a writer
         # killed mid-eviction at that phase.
         self.fault_injector = fault_injector or (lambda phase: None)
+        # staging dirs with a writer currently inside them (fleet: N async
+        # writers share one store) — gc must never sweep these
+        self._stage_lock = threading.Lock()
+        self._inflight_stages: set[str] = set()
+        # serializes the replace+mark phase across this store's writers so a
+        # same-step commit race can never delete a committed checkpoint
+        self._commit_lock = threading.Lock()
         os.makedirs(root, exist_ok=True)
 
     # -- write ---------------------------------------------------------------
@@ -67,6 +79,8 @@ class CheckpointStore:
         final = os.path.join(self.root, mf.step_dirname(snapshot.step))
         stage = final + f".tmp-{uuid.uuid4().hex[:8]}"
         os.makedirs(stage, exist_ok=True)
+        with self._stage_lock:
+            self._inflight_stages.add(stage)
         try:
             records = sharded.write_snapshot(
                 stage, snapshot, compress=self.compress,
@@ -76,17 +90,27 @@ class CheckpointStore:
                 step=snapshot.step, kind=kind, created_at=self.time_fn(),
                 tensors=records, leaf_order=snapshot.leaf_order,
                 treedef_repr=snapshot.treedef_repr, mesh=snapshot.mesh,
-                extra=extra or {})
+                extra={**self.tags, **(extra or {})})
             mf.write_manifest(stage, man)
             self.fault_injector("manifest_written")
-            if os.path.exists(final):  # re-save of same step: replace
-                shutil.rmtree(final)
-            os.replace(stage, final)
-            self.fault_injector("renamed")
-            mf.mark_committed(final)
+            with self._commit_lock:
+                if mf.is_committed(final):
+                    # another fleet member already committed this step; the
+                    # committed copy captures the same state — never delete
+                    # it (our writer may die mid-eviction before re-creating)
+                    shutil.rmtree(stage, ignore_errors=True)
+                else:
+                    if os.path.exists(final):  # uncommitted leftover: replace
+                        shutil.rmtree(final)
+                    os.replace(stage, final)
+                    self.fault_injector("renamed")
+                    mf.mark_committed(final)
         except BaseException:
             # leave staging dir for post-mortem; it is invisible to readers
             raise
+        finally:
+            with self._stage_lock:
+                self._inflight_stages.discard(stage)
         nbytes = sum(r["nbytes"] for r in records)
         info = CheckpointInfo(step=snapshot.step, path=final, kind=kind,
                               nbytes=nbytes, elapsed_s=self.time_fn() - t0)
@@ -150,17 +174,30 @@ class CheckpointStore:
 
     # -- maintenance -----------------------------------------------------------
 
-    def gc(self) -> list[int]:
+    def gc(self, *, stale_staging_age_s: float = 3600.0) -> list[int]:
         """Keep the newest `retention` committed checkpoints; drop the rest."""
         steps = self.committed_steps()
         doomed = steps[:-self.retention] if self.retention > 0 else []
         for step in doomed:
             shutil.rmtree(os.path.join(self.root, mf.step_dirname(step)),
                           ignore_errors=True)
-        # also sweep dead staging dirs older than nothing-in-particular:
+        # sweep dead staging dirs — but never one a live writer is inside
+        # (this process: tracked set; another host on the shared volume:
+        # age-gated by real mtime, an eviction notice is seconds not hours)
+        with self._stage_lock:
+            inflight = set(self._inflight_stages)
         for d in os.listdir(self.root):
-            if ".tmp-" in d:
-                shutil.rmtree(os.path.join(self.root, d), ignore_errors=True)
+            if ".tmp-" not in d:
+                continue
+            path = os.path.join(self.root, d)
+            if path in inflight:
+                continue
+            try:
+                if time.time() - os.path.getmtime(path) < stale_staging_age_s:
+                    continue
+            except OSError:
+                pass  # already gone (or unreadable): try the sweep anyway
+            shutil.rmtree(path, ignore_errors=True)
         return doomed
 
     def total_bytes(self) -> int:

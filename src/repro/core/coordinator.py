@@ -3,18 +3,24 @@
 Runs beside the workload (in-process here; a sidecar in the paper), and owns:
 
 * scheduling **periodic checkpoints** (transparent mode),
-* polling the metadata service and, on a ``Preempt`` event, taking an
-  opportunistic **termination checkpoint** (transparent mode only — the
-  application-specific mode *cannot checkpoint on demand*, per the paper),
+* polling the cloud metadata service through its ``CloudProvider`` backend
+  (Azure Scheduled Events / AWS IMDS / GCP preempted flag) and, on a
+  normalized preempt notice, taking an opportunistic **termination
+  checkpoint** (transparent mode only — the application-specific mode
+  *cannot checkpoint on demand*, per the paper). Advance *rebalance*
+  recommendations (AWS) trigger a proactive checkpoint without stopping,
 * on restart, finding the **most recent valid checkpoint** and restoring,
 * (beyond paper, needed at 1000-node scale) a **straggler policy** that turns a
   persistently slow instance into a voluntary eviction: checkpoint + replace.
 
-Time accounting: when a ``TimeModel`` is given (virtual-time benchmarks), the
-coordinator charges modeled durations to the clock — extract cost for async
-periodic saves (write IO overlaps training), extract+write for blocking
-termination / stage checkpoints, read cost for restores. In wall-clock mode
-durations are charged by physics.
+Time accounting is delegated to a ``TimeLedger`` (core/ledger.py): when a
+``TimeModel`` is configured (virtual-time benchmarks) the ledger charges
+modeled durations to the clock — extract cost for async periodic saves (write
+IO overlaps training), extract+write for blocking termination / stage
+checkpoints, read cost for restores. In wall-clock mode durations are charged
+by physics. Checkpoints written through the coordinator carry
+``{"provider", "instance"}`` tags in their manifest extras, so a fleet's
+shared store records which cloud wrote each checkpoint.
 """
 
 from __future__ import annotations
@@ -29,8 +35,10 @@ from ..checkpoint.async_ckpt import AsyncCheckpointer
 from ..checkpoint.sharded import Snapshot, extract_snapshot
 from ..checkpoint.store import CheckpointStore
 from .clock import Clock, VirtualClock
-from .events import first_preempt, MetadataService
+from .ledger import TimeLedger, TimeModel  # noqa: F401  (TimeModel re-export)
 from .policy import CheckpointPolicy, Mode
+from .providers import (CloudProvider, PreemptNotice, PREEMPT_KIND,
+                        REBALANCE_KIND, get_provider)
 
 log = logging.getLogger("spoton")
 
@@ -41,27 +49,13 @@ class Signal(enum.Enum):
     STRAGGLER = "straggler"     # ask the pool for a replacement
 
 
-@dataclass(frozen=True)
-class TimeModel:
-    """Virtual-time cost of checkpoint operations, by bytes moved."""
-
-    extract_bw: float = 10e9     # device->host snapshot bandwidth
-    write_bw: float = 0.5e9      # shared-NFS write bandwidth
-    read_bw: float = 1.0e9       # shared-NFS read bandwidth
-    latency_s: float = 2.0       # per-op fixed cost (mount, metadata, commit)
-
-    def extract_s(self, nbytes: int) -> float:
-        return nbytes / self.extract_bw
-
-    def write_s(self, nbytes: int) -> float:
-        return self.latency_s + nbytes / self.write_bw
-
-    def read_s(self, nbytes: int) -> float:
-        return self.latency_s + nbytes / self.read_bw
-
-
 class StragglerDetector:
-    """Flags an instance whose step time stays above factor×rolling-median."""
+    """Flags an instance whose step time stays above factor×rolling-median.
+
+    Firing re-arms the detector (window + streak cleared): the flag evicts the
+    instance, so stale samples from it must not condemn the replacement — the
+    detector needs ``min_samples`` fresh observations before it can fire again.
+    """
 
     def __init__(self, factor: float = 2.0, window: int = 50,
                  min_samples: int = 20, patience: int = 5):
@@ -79,7 +73,10 @@ class StragglerDetector:
             else:
                 self._slow_streak = 0
         self.window.append(step_duration_s)
-        return self._slow_streak >= self.patience
+        if self._slow_streak >= self.patience:
+            self.reset()
+            return True
+        return False
 
     def reset(self) -> None:
         self._slow_streak = 0
@@ -89,8 +86,10 @@ class StragglerDetector:
 @dataclass
 class CoordinatorStats:
     periodic_ckpts: int = 0
+    periodic_failures: int = 0
     termination_ckpts: int = 0
     termination_failures: int = 0
+    rebalance_ckpts: int = 0
     stage_ckpts: int = 0
     restores: int = 0
     ckpt_bytes_written: int = 0
@@ -105,27 +104,34 @@ class SpotOnCoordinator:
         policy: CheckpointPolicy,
         clock: Clock,
         *,
+        provider: CloudProvider | str | None = None,
         mesh_info: dict | None = None,
         time_model: TimeModel | None = None,
+        ledger: TimeLedger | None = None,
         straggler: StragglerDetector | None = None,
     ):
         self.store = store
         self.policy = policy
         self.clock = clock
+        self.provider = get_provider(provider if provider is not None else "azure")
         self.mesh_info = mesh_info or {}
-        self.time_model = time_model
+        self.ledger = ledger if ledger is not None else TimeLedger(clock, time_model)
         self.straggler = straggler
         self.stats = CoordinatorStats()
         self._async = AsyncCheckpointer(store) if policy.async_writes else None
-        self._metadata: MetadataService | None = None
+        self._metadata: Any = None
         self._instance_name: str | None = None
         self._last_periodic_at = clock.now()
-        self._preempt_handled: set[str] = set()
+        self._handled_notices: set[str] = set()
         self._last_poll_at = -float("inf")
+
+    @property
+    def time_model(self) -> TimeModel | None:
+        return self.ledger.time_model
 
     # -- lifecycle --------------------------------------------------------------
 
-    def attach_instance(self, metadata: MetadataService, name: str) -> None:
+    def attach_instance(self, metadata: Any, name: str) -> None:
         """Bind to the (new) instance's metadata endpoint after (re)start."""
         self._metadata = metadata
         self._instance_name = name
@@ -137,31 +143,53 @@ class SpotOnCoordinator:
         self._metadata = None
         self._instance_name = None
 
-    # -- time accounting ---------------------------------------------------------
-
-    def _charge(self, seconds: float) -> None:
-        if self.time_model is not None and isinstance(self.clock, VirtualClock):
-            self.clock.advance(seconds)
-
     # -- checkpoint actions --------------------------------------------------------
 
-    def _save_periodic(self, step: int, state) -> None:
+    def _tags(self, **extra) -> dict:
+        """Provider/instance provenance recorded in each manifest's extras."""
+        tags = {"provider": self.provider.name}
+        if self._instance_name is not None:
+            tags["instance"] = self._instance_name
+        tags.update(extra)
+        return tags
+
+    def save_periodic_now(self, step: int, state) -> bool:
+        """Take one periodic-style checkpoint immediately (used by the fleet
+        coordinator, which owns the cadence across members)."""
+        return self._save_periodic(step, state)
+
+    def _save_periodic(self, step: int, state, *, stat: str = "periodic") -> bool:
         t0 = self.clock.now()
-        if self._async is not None:
-            snap = self._async.save_async(step, state, kind="transparent",
-                                          mesh_info=self.mesh_info)
-        else:
-            snap = extract_snapshot(state, step=step, mesh_info=self.mesh_info)
-            self.store.save_snapshot(snap, kind="transparent")
+        try:
+            if self._async is not None:
+                snap = self._async.save_async(step, state, kind="transparent",
+                                              mesh_info=self.mesh_info,
+                                              extra=self._tags())
+            else:
+                snap = extract_snapshot(state, step=step,
+                                        mesh_info=self.mesh_info)
+                self.store.save_snapshot(snap, kind="transparent",
+                                         extra=self._tags())
+        except (RuntimeError, OSError) as e:
+            # a failed periodic save must not kill training: the committed
+            # history is untouched (atomic commit) and the next cadence
+            # retries with fresher state
+            log.warning("periodic checkpoint failed: %s", e)
+            self.stats.periodic_failures += 1
+            self._last_periodic_at = self.clock.now()
+            return False
         # async: trainer pays only the device->host extract; write overlaps
-        cost = (self.time_model.extract_s(snap.nbytes) if self._async is not None
-                else self.time_model.extract_s(snap.nbytes) + self.time_model.write_s(snap.nbytes)) \
-            if self.time_model else 0.0
-        self._charge(cost)
-        self.stats.periodic_ckpts += 1
+        cost = (self.ledger.extract_s(snap.nbytes) if self._async is not None
+                else self.ledger.extract_s(snap.nbytes) + self.ledger.write_s(snap.nbytes))
+        self.ledger.charge(cost, category="ckpt")
+        if stat == "rebalance":
+            self.stats.rebalance_ckpts += 1
+        else:
+            self.stats.periodic_ckpts += 1
         self.stats.ckpt_bytes_written += snap.nbytes
         self.stats.ckpt_time_s += (self.clock.now() - t0)
         self._last_periodic_at = self.clock.now()
+        return True
 
     def _save_termination(self, step: int, state, deadline: float) -> bool:
         """Opportunistic: returns False if the notice window was missed."""
@@ -173,24 +201,25 @@ class SpotOnCoordinator:
         try:
             if self._async is not None:
                 info = self._async.save_urgent(step, state, mesh_info=self.mesh_info,
+                                               extra=self._tags(),
                                                timeout_s=max(budget, 0.1))
                 nbytes = info.nbytes
             else:
                 snap = extract_snapshot(state, step=step, mesh_info=self.mesh_info)
-                info = self.store.save_snapshot(snap, kind="termination")
+                info = self.store.save_snapshot(snap, kind="termination",
+                                                extra=self._tags())
                 nbytes = snap.nbytes
-        except (TimeoutError, RuntimeError) as e:
+        except (TimeoutError, RuntimeError, OSError) as e:
             log.warning("termination checkpoint failed: %s", e)
             self.stats.termination_failures += 1
             return False
-        cost = (self.time_model.extract_s(nbytes) + self.time_model.write_s(nbytes)) \
-            if self.time_model else 0.0
-        if self.time_model and cost > budget:
+        cost = self.ledger.extract_s(nbytes) + self.ledger.write_s(nbytes)
+        if self.ledger.time_model is not None and cost > budget:
             # virtual-time world: the write would not have finished in time
-            self._charge(budget)
+            self.ledger.charge(budget, category="ckpt")
             self.stats.termination_failures += 1
             return False
-        self._charge(cost)
+        self.ledger.charge(cost, category="ckpt")
         self.stats.termination_ckpts += 1
         self.stats.ckpt_bytes_written += nbytes
         self.stats.ckpt_time_s += (self.clock.now() - t0)
@@ -203,40 +232,58 @@ class SpotOnCoordinator:
         t0 = self.clock.now()
         snap = extract_snapshot(state, step=step, mesh_info=self.mesh_info)
         self.store.save_snapshot(snap, kind="application",
-                                 extra={"stage": stage})
+                                 extra=self._tags(stage=stage))
         # app-specific saves are synchronous in the app's critical path
-        self._charge(self.time_model.extract_s(snap.nbytes)
-                     + self.time_model.write_s(snap.nbytes)
-                     if self.time_model else 0.0)
+        self.ledger.charge(self.ledger.extract_s(snap.nbytes)
+                           + self.ledger.write_s(snap.nbytes), category="ckpt")
         self.stats.stage_ckpts += 1
         self.stats.ckpt_bytes_written += snap.nbytes
         self.stats.ckpt_time_s += (self.clock.now() - t0)
 
     # -- the per-step hook ----------------------------------------------------------
 
+    def _poll_notices(self, now: float) -> tuple[PreemptNotice | None,
+                                                 PreemptNotice | None]:
+        """Provider-normalized poll. Returns (preempt, rebalance) — each the
+        first not-yet-handled notice of its kind, or None."""
+        if self._metadata is None or now - self._last_poll_at < self.policy.poll_interval_s:
+            return None, None
+        self._last_poll_at = now
+        preempt = rebalance = None
+        for n in self.provider.poll(self._metadata, self._instance_name, now):
+            if n.event_id in self._handled_notices:
+                continue
+            if n.kind == PREEMPT_KIND and preempt is None:
+                preempt = n
+            elif n.kind == REBALANCE_KIND and rebalance is None:
+                rebalance = n
+        return preempt, rebalance
+
     def on_step_end(self, step: int, state_provider: Callable[[], Any],
                     step_duration_s: float | None = None) -> Signal:
         now = self.clock.now()
         # 1. metadata poll (rate-limited like the paper's curl loop)
-        preempt = None
-        if self._metadata is not None and now - self._last_poll_at >= self.policy.poll_interval_s:
-            self._last_poll_at = now
-            doc = self._metadata.get_scheduled_events()
-            preempt = first_preempt(doc, self._instance_name)
-            if preempt is not None and preempt["EventId"] in self._preempt_handled:
-                preempt = None
+        preempt, rebalance = self._poll_notices(now)
         # 2. eviction imminent
         if preempt is not None:
-            self._preempt_handled.add(preempt["EventId"])
-            log.info("Preempt notice for %s (NotBefore=%s)",
-                     self._instance_name, preempt["NotBefore"])
+            self._handled_notices.add(preempt.event_id)
+            log.info("[%s] preempt notice for %s (deadline=%.1f)",
+                     self.provider.name, self._instance_name, preempt.deadline)
             if self.policy.supports_on_demand:
                 self._save_termination(step, state_provider(),
-                                       deadline=float(preempt["NotBefore"]))
+                                       deadline=preempt.deadline)
             # app-specific mode cannot act (paper semantics) — work since the
             # last stage boundary will be lost.
-            self._metadata.acknowledge_event(preempt["EventId"])
+            self.provider.acknowledge(self._metadata, preempt)
             return Signal.PREEMPTING
+        # 2b. rebalance recommendation (AWS): checkpoint proactively, keep going
+        if rebalance is not None:
+            self._handled_notices.add(rebalance.event_id)
+            if (self.policy.supports_on_demand
+                    and self.policy.checkpoint_on_rebalance):
+                log.info("[%s] rebalance recommendation for %s: proactive ckpt",
+                         self.provider.name, self._instance_name)
+                self._save_periodic(step, state_provider(), stat="rebalance")
         # 3. periodic checkpoint
         if (self.policy.periodic_enabled
                 and now - self._last_periodic_at >= self.policy.periodic_interval_s):
@@ -261,16 +308,24 @@ class SpotOnCoordinator:
         except FileNotFoundError:
             return None
         nbytes = sum(t["nbytes"] for t in man.tensors)
-        self._charge(self.time_model.read_s(nbytes) if self.time_model else 0.0)
+        self.ledger.charge(self.ledger.read_s(nbytes), category="restore")
         self.stats.restores += 1
         self.stats.restore_time_s += (self.clock.now() - t0)
         return state, man
 
     def flush(self) -> None:
         if self._async is not None:
-            self._async.wait_until_finished()
+            try:
+                self._async.wait_until_finished()
+            except RuntimeError as e:
+                log.warning("async checkpoint write failed at flush: %s", e)
+                self.stats.periodic_failures += 1
 
     def close(self) -> None:
         if self._async is not None:
-            self._async.close()
+            try:
+                self._async.close()
+            except RuntimeError as e:
+                log.warning("async checkpoint write failed at close: %s", e)
+                self.stats.periodic_failures += 1
             self._async = None

@@ -4,7 +4,10 @@ Prices are per-instance-hour. The paper's case study uses Azure D8s_v3
 (on-demand $0.38/hr, spot $0.076/hr — an 80% discount) and Azure Files NFS at
 $16 per 100 GiB provisioned per month. We also ship a TPU-v5e-like sheet for
 the framework's target hardware (public list prices, us-central, mid-2024:
-~$1.20/chip-hr on-demand, ~$0.47 preemptible).
+~$1.20/chip-hr on-demand, ~$0.47 preemptible) plus size-comparable AWS/GCP
+sheets (8 vCPU / 32 GiB; us-east list prices with typical spot discounts, and
+EFS / Filestore standing in for the shared checkpoint volume) used by the
+multi-cloud provider backends.
 """
 
 from __future__ import annotations
@@ -29,6 +32,10 @@ class PriceSheet:
 
 AZURE_D8S_V3 = PriceSheet("azure-d8s-v3", ondemand_per_hr=0.38, spot_per_hr=0.076)
 TPU_V5E_CHIP = PriceSheet("tpu-v5e-chip", ondemand_per_hr=1.20, spot_per_hr=0.47)
+AWS_M5_2XLARGE = PriceSheet("aws-m5-2xlarge", ondemand_per_hr=0.384,
+                            spot_per_hr=0.134, storage_per_100gib_month=30.0)
+GCP_N2_STANDARD_8 = PriceSheet("gcp-n2-standard-8", ondemand_per_hr=0.388,
+                               spot_per_hr=0.097, storage_per_100gib_month=20.0)
 
 
 @dataclass

@@ -42,6 +42,23 @@ def plan_mesh_for(n_devices: int, *, model_parallel: int, axes=("data", "model")
     return MeshPlan((n_devices // model_parallel, model_parallel), tuple(axes))
 
 
+def fleet_mesh_plan(n_instances: int, *, hosts_per_instance: int = 1,
+                    model_parallel: int = 1,
+                    axes=("data", "model")) -> MeshPlan:
+    """Mesh plan for a fleet's surviving capacity (eviction-driven rescale).
+
+    Each fleet instance contributes ``hosts_per_instance`` accounting units;
+    the model-parallel degree is preserved across rescales so parameter
+    shards keep fitting one instance. Raises ValueError when the surviving
+    capacity cannot host the model-parallel degree — the fleet coordinator
+    records that as a stall rather than a rescale.
+    """
+    if n_instances < 1:
+        raise ValueError("fleet has no surviving instances")
+    return plan_mesh_for(n_instances * hosts_per_instance,
+                         model_parallel=model_parallel, axes=axes)
+
+
 def elastic_restore(store: CheckpointStore, template_fn, mesh: Mesh):
     """Restore the latest valid checkpoint onto `mesh`.
 

@@ -30,6 +30,7 @@ class CheckpointPolicy:
     periodic_interval_s: float = 900.0      # paper uses 15/30 min
     poll_interval_s: float = 1.0            # metadata poll cadence
     async_writes: bool = True               # overlap write IO with training
+    checkpoint_on_rebalance: bool = True    # AWS rebalance hint -> proactive ckpt
 
     @property
     def supports_on_demand(self) -> bool:

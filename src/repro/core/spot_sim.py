@@ -1,14 +1,17 @@
-"""Spot-instance lifecycle + Scale Set pool simulator.
+"""Spot-instance lifecycle + pool-manager simulator (multi-provider).
 
-Models the slice of Azure the paper depends on:
+Models the slice of a spot cloud the paper depends on:
 
 * a **spot instance** that runs until the platform preempts it — preemption is
-  announced through its Scheduled-Events metadata document with >=30 s notice,
-  then the instance is destroyed at ``NotBefore`` (all un-checkpointed work is
-  lost);
-* a **Scale Set** that keeps target capacity by provisioning a replacement
+  announced through its provider-shaped metadata document with the provider's
+  guaranteed notice, then the instance is destroyed at the deadline (all
+  un-checkpointed work is lost);
+* a **pool manager** that keeps target capacity by provisioning a replacement
   after an eviction (paper §III: "scale sets act as a VM pool manager ...
-  capable of restarting new spot instances upon eviction");
+  capable of restarting new spot instances upon eviction"). ``InstancePool``
+  is the generic machinery; ``ScaleSet`` (Azure), ``AutoScalingGroup`` (AWS,
+  with advance rebalance recommendations) and ``ManagedInstanceGroup`` (GCP)
+  carry per-vendor defaults;
 * **eviction schedules** driving when preemptions happen: the paper uses
   fixed 60/90-minute intervals via ``simulate-eviction``; we add Poisson and
   trace-driven schedules for beyond-paper experiments.
@@ -22,7 +25,7 @@ from __future__ import annotations
 import enum
 import itertools
 from dataclasses import dataclass, field
-from typing import Iterator, Protocol
+from typing import Any, Callable, Iterator, Protocol
 
 import numpy as np
 
@@ -48,11 +51,15 @@ class SpotInstance:
     running_since: float | None = None
     terminated_at: float | None = None
     eviction_not_before: float | None = None
-    metadata: SimulatedMetadataService = None  # type: ignore[assignment]
+    # provider metadata endpoint; any object with schedule_preempt(notice_s=)
+    # returning an event carrying .not_before (Azure Scheduled Events by default)
+    metadata: Any = None
+    metadata_factory: Callable[[Clock, str], Any] | None = None
 
     def __post_init__(self):
         if self.metadata is None:
-            self.metadata = SimulatedMetadataService(self.clock, self.name)
+            factory = self.metadata_factory or SimulatedMetadataService
+            self.metadata = factory(self.clock, self.name)
 
     # -- platform actions ------------------------------------------------------
 
@@ -142,15 +149,18 @@ class TraceEviction:
 
 
 # ---------------------------------------------------------------------------
-# scale set
+# pool managers
 # ---------------------------------------------------------------------------
 
 @dataclass
-class ScaleSet:
-    """Capacity-1 pool (the paper's setup), generalized knobs kept explicit.
+class InstancePool:
+    """Capacity-1 replacement pool (the paper's setup), provider-generic.
 
     `hosts_per_instance` models a pod slice: one logical "instance" may stand
-    for N accounting units (e.g. 256 chips) so the cost model scales.
+    for N accounting units (e.g. 256 chips) so the cost model scales. When a
+    ``provider`` (core.providers.CloudProvider) is given, its metadata schema,
+    instance-name prefix and notice floor are used; without one the pool
+    behaves exactly like the original Azure Scale Set.
     """
 
     clock: Clock
@@ -158,15 +168,27 @@ class ScaleSet:
     accountant: CostAccountant | None = None
     kind: str = "spot"                    # instance kind provisioned
     provisioning_delay_s: float = 60.0    # VM create + boot + custom-data
-    notice_s: float = DEFAULT_NOTICE_S
+    notice_s: float | None = None         # None -> provider floor (or Azure's)
     hosts_per_instance: int = 1
+    provider: Any = None                  # core.providers.CloudProvider | None
+    name_prefix: str | None = None        # None -> provider prefix (or "vm-")
+    rebalance_lead_s: float = 0.0         # AWS: hint this long before the kill
     _names: Iterator[int] = field(default_factory=lambda: itertools.count(0))
     _eviction_iter: Iterator[float] | None = None
     _next_eviction: float | None = None
     current: SpotInstance | None = None
     evictions_announced: int = 0
+    rebalance_recommendations: int = 0
     instances_created: int = 0
     _pending_ready_at: float | None = None
+
+    def __post_init__(self):
+        if self.notice_s is None:
+            self.notice_s = (self.provider.notice_s if self.provider is not None
+                             else DEFAULT_NOTICE_S)
+        if self.name_prefix is None:
+            self.name_prefix = (self.provider.instance_prefix
+                                if self.provider is not None else "vm-")
 
     def start(self) -> None:
         self._eviction_iter = iter(self.schedule.eviction_times(self.clock.now()))
@@ -178,15 +200,21 @@ class ScaleSet:
         delay = 0.0 if self.instances_created == 0 else self.provisioning_delay_s
         self._pending_ready_at = self.clock.now() + delay
 
+    def _metadata_factory(self) -> Callable[[Clock, str], Any] | None:
+        if self.provider is None:
+            return None
+        return self.provider.make_metadata
+
     def tick(self) -> SpotInstance | None:
         """Drive platform events up to `clock.now()`. Returns running instance
         (or None while a replacement is provisioning)."""
         now = self.clock.now()
         # bring up pending instance
         if self.current is None and self._pending_ready_at is not None and now >= self._pending_ready_at:
-            name = f"vm-{next(self._names):04d}"
+            name = f"{self.name_prefix}{next(self._names):04d}"
             inst = SpotInstance(name=name, clock=self.clock, kind=self.kind,
-                                created_at=now)
+                                created_at=now,
+                                metadata_factory=self._metadata_factory())
             inst.boot()
             self.current = inst
             self.instances_created += 1
@@ -194,8 +222,18 @@ class ScaleSet:
         inst = self.current
         if inst is None:
             return None
-        # fire due evictions (spot only)
         if self.kind == "spot":
+            # advance rebalance hint (AWS): issued `rebalance_lead_s` before
+            # the interruption, on metadata services that support it
+            if (self.rebalance_lead_s > 0 and self._next_eviction is not None
+                    and now >= self._next_eviction - self.rebalance_lead_s):
+                announce = getattr(inst.metadata, "announce_rebalance", None)
+                if announce is not None and \
+                        getattr(inst.metadata, "get_rebalance_recommendation",
+                                lambda: None)() is None:
+                    announce()
+                    self.rebalance_recommendations += 1
+            # fire due evictions
             while self._next_eviction is not None and now >= self._next_eviction:
                 inst.announce_preemption(notice_s=self.notice_s)
                 self.evictions_announced += 1
@@ -231,3 +269,21 @@ class ScaleSet:
             self.clock.sleep(max(target - self.clock.now(), 0.0) + 1e-9)
             inst = self.tick()
         return inst
+
+
+@dataclass
+class ScaleSet(InstancePool):
+    """Azure VM Scale Set — the paper's pool manager (and the default)."""
+
+
+@dataclass
+class AutoScalingGroup(InstancePool):
+    """AWS Auto Scaling Group: 120 s instance-action notice plus an advance
+    rebalance recommendation `rebalance_lead_s` before the interruption."""
+
+    rebalance_lead_s: float = 300.0
+
+
+@dataclass
+class ManagedInstanceGroup(InstancePool):
+    """GCP Managed Instance Group: ~30 s ACPI-G2 preemption notice."""

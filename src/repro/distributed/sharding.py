@@ -68,6 +68,22 @@ class ShardingRules:
         return self.model_axis if dim % self.tp_size == 0 else None
 
 
+def elastic_rules(mesh: Mesh, *, model_axis: str = "model",
+                  fsdp: bool = False, seq_parallel: bool = False) -> ShardingRules:
+    """ShardingRules for a freshly re-planned (elastic-rescale) mesh.
+
+    Every mesh axis except ``model_axis`` carries data parallelism — the shape
+    produced by ``core.elastic.plan_mesh_for`` / ``fleet_mesh_plan`` after an
+    eviction shrinks or regrows the pool. Used by the fleet coordinator to
+    rebuild activation/parameter shardings when surviving capacity changes.
+    """
+    data_axes = tuple(a for a in mesh.axis_names if a != model_axis)
+    if not data_axes:  # degenerate 1-axis mesh: model axis doubles as data
+        data_axes = tuple(mesh.axis_names)
+    return ShardingRules(mesh=mesh, data_axes=data_axes, model_axis=model_axis,
+                         fsdp=fsdp, seq_parallel=seq_parallel)
+
+
 def use_sharding_rules(rules: ShardingRules | None):
     @contextlib.contextmanager
     def cm():

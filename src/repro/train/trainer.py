@@ -31,9 +31,9 @@ from typing import Any, Callable
 import jax
 import numpy as np
 
-from ..core.clock import Clock, VirtualClock
+from ..core.clock import Clock
 from ..core.coordinator import Signal, SpotOnCoordinator
-from ..core.spot_sim import ScaleSet
+from ..core.spot_sim import InstancePool
 from ..data import PipelineState, TokenPipeline
 from ..models.config import ModelConfig
 from ..optim import AdamWConfig
@@ -75,13 +75,14 @@ class RunReport:
 
 class SpotTrainer:
     def __init__(self, job: TrainJob, coordinator: SpotOnCoordinator,
-                 pool: ScaleSet, clock: Clock, *,
+                 pool: InstancePool, clock: Clock, *,
                  step_time_s: float | None = None,
                  max_sessions: int = 200):
         self.job = job
         self.coord = coordinator
         self.pool = pool
         self.clock = clock
+        self.ledger = coordinator.ledger   # shared virtual-time accounting
         self.step_time_s = step_time_s
         self.max_sessions = max_sessions
         cfg = job.cfg
@@ -144,8 +145,7 @@ class SpotTrainer:
                 t0 = clock.now()
                 state, metrics = self._step_fn(state, batch)
                 jax.block_until_ready(metrics["loss"])
-                if self.step_time_s is not None and isinstance(clock, VirtualClock):
-                    clock.advance(self.step_time_s)
+                self.ledger.charge_step(self.step_time_s)
                 dur = clock.now() - t0
                 step += 1
                 steps_executed += 1
@@ -201,8 +201,10 @@ class SpotTrainer:
                 "periodic_ckpts": st.periodic_ckpts,
                 "termination_ckpts": st.termination_ckpts,
                 "termination_failures": st.termination_failures,
+                "rebalance_ckpts": st.rebalance_ckpts,
                 "stage_ckpts": st.stage_ckpts,
                 "ckpt_bytes_written": st.ckpt_bytes_written,
                 "ckpt_time_s": st.ckpt_time_s,
             },
+            extra={"provider": self.coord.provider.name},
         )

@@ -60,6 +60,68 @@ class TestTransparent:
         assert coord.on_step_end(2, lambda: state(2)) is Signal.CONTINUE
 
 
+class TestDeadlineEdges:
+    """Termination-checkpoint deadline edges: zero/negative budget, virtual
+    cost exceeding the notice window, duplicate-event suppression."""
+
+    def test_zero_budget_fails_without_write(self, tmp_path):
+        coord, md, clock, store = make(tmp_path, CheckpointPolicy.transparent(1e9))
+        ev = md.schedule_preempt(notice_s=30.0)
+        clock.advance(ev.not_before - clock.now())     # poll lands AT NotBefore
+        sig = coord.on_step_end(5, lambda: state(5))
+        assert sig is Signal.PREEMPTING
+        assert coord.stats.termination_failures == 1
+        assert coord.stats.termination_ckpts == 0
+        assert store.committed_steps() == []
+
+    def test_negative_budget_fails_without_write(self, tmp_path):
+        coord, md, clock, store = make(tmp_path, CheckpointPolicy.transparent(1e9))
+        md.schedule_preempt(notice_s=30.0)
+        clock.advance(90.0)                            # way past the deadline
+        sig = coord.on_step_end(5, lambda: state(5))
+        assert sig is Signal.PREEMPTING
+        assert coord.stats.termination_failures == 1
+        assert store.committed_steps() == []
+
+    def test_virtual_cost_exceeding_window_charges_only_budget(self, tmp_path):
+        # write cost exceeds the remaining notice: the failure must consume
+        # exactly the budget (the VM was writing until the platform killed it)
+        tm = TimeModel(write_bw=1.0, latency_s=500.0)  # cost >> 30 s window
+        coord, md, clock, store = make(tmp_path, CheckpointPolicy.transparent(1e9),
+                                       tm=tm)
+        ev = md.simulate_eviction()
+        clock.advance(2.0)
+        t_before = clock.now()
+        budget = ev.not_before - t_before
+        sig = coord.on_step_end(3, lambda: state(3))
+        assert sig is Signal.PREEMPTING
+        assert coord.stats.termination_failures == 1
+        assert clock.now() - t_before == pytest.approx(budget)
+
+    def test_duplicate_event_id_suppressed(self, tmp_path):
+        coord, md, clock, store = make(tmp_path, CheckpointPolicy.transparent(1e9))
+        md.simulate_eviction()
+        clock.advance(2.0)
+        assert coord.on_step_end(1, lambda: state(1)) is Signal.PREEMPTING
+        assert coord.stats.termination_ckpts == 1
+        # same event still in the document: must not be handled twice
+        for step in (2, 3, 4):
+            clock.advance(2.0)
+            assert coord.on_step_end(step, lambda s=step: state(s)) is Signal.CONTINUE
+        assert coord.stats.termination_ckpts == 1
+
+    def test_distinct_event_handled_separately(self, tmp_path):
+        coord, md, clock, store = make(tmp_path, CheckpointPolicy.transparent(1e9))
+        md.simulate_eviction()
+        clock.advance(2.0)
+        assert coord.on_step_end(1, lambda: state(1)) is Signal.PREEMPTING
+        md.clear()
+        md.simulate_eviction()                         # a NEW event id
+        clock.advance(2.0)
+        assert coord.on_step_end(2, lambda: state(2)) is Signal.PREEMPTING
+        assert coord.stats.termination_ckpts == 2
+
+
 class TestApplication:
     def test_cannot_checkpoint_on_demand(self, tmp_path):
         """Paper: 'application-specific checkpointing cannot be taken on

@@ -1,0 +1,238 @@
+"""Multi-cloud provider backends: metadata schema fidelity, notice semantics,
+pool behavior, coordinator integration, and the trainer completing under
+eviction on every backend with identical checkpoint/restore invariants."""
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointStore
+from repro.checkpoint import manifest as mf
+from repro.core import (CheckpointPolicy, CostAccountant, PeriodicEviction,
+                        Signal, SpotOnCoordinator, TimeModel, VirtualClock,
+                        get_provider)
+from repro.core.providers import (AwsProvider, AzureProvider, GcpProvider,
+                                  PREEMPT_KIND, REBALANCE_KIND)
+from repro.core.providers.aws import iso_to_ts, ts_to_iso
+
+
+def state(step):
+    return {"w": np.full((16,), float(step), np.float32), "step": step}
+
+
+def make_coord(tmp_path, provider, policy=None, tm=TimeModel()):
+    clock = VirtualClock()
+    store = CheckpointStore(str(tmp_path), time_fn=clock.now)
+    coord = SpotOnCoordinator(store, policy or CheckpointPolicy.transparent(1e9),
+                              clock, provider=provider, time_model=tm)
+    md = provider.make_metadata(clock, "inst-0")
+    coord.attach_instance(md, "inst-0")
+    return coord, md, clock, store
+
+
+class TestRegistry:
+    def test_get_provider_by_name(self):
+        assert get_provider("azure").name == "azure"
+        assert get_provider("aws").name == "aws"
+        assert get_provider("gcp").name == "gcp"
+
+    def test_passthrough_and_unknown(self):
+        p = AwsProvider()
+        assert get_provider(p) is p
+        with pytest.raises(ValueError):
+            get_provider("ibm")
+
+    def test_notice_floors(self):
+        assert get_provider("azure").notice_s == 30.0
+        assert get_provider("aws").notice_s == 120.0
+        assert get_provider("gcp").notice_s == 30.0
+
+
+class TestAwsSchema:
+    def test_instance_action_document_shape(self):
+        clock = VirtualClock(start=1000.0)
+        md = AwsProvider().make_metadata(clock, "i-0001")
+        assert md.get_instance_action() is None          # the 404 case
+        ev = md.schedule_preempt(notice_s=120.0)
+        doc = md.get_instance_action()
+        assert set(doc) == {"action", "time"}
+        assert doc["action"] == "terminate"
+        # ISO-8601 UTC wire format round-trips to the clock deadline
+        assert doc["time"].endswith("Z")
+        assert iso_to_ts(doc["time"]) == pytest.approx(ev.not_before, abs=1e-3)
+        assert ev.not_before == pytest.approx(1120.0, abs=1e-3)
+
+    def test_two_minute_floor(self):
+        md = AwsProvider().make_metadata(VirtualClock(), "i-0")
+        ev = md.schedule_preempt(notice_s=10.0)          # below the floor
+        assert ev.not_before >= 120.0
+
+    def test_poll_orders_preempt_before_rebalance(self):
+        prov = AwsProvider()
+        clock = VirtualClock()
+        md = prov.make_metadata(clock, "i-0")
+        md.announce_rebalance()
+        md.schedule_preempt()
+        notices = prov.poll(md, "i-0", clock.now())
+        assert [n.kind for n in notices] == [PREEMPT_KIND, REBALANCE_KIND]
+
+    def test_iso_roundtrip(self):
+        assert iso_to_ts(ts_to_iso(1234567.25)) == pytest.approx(1234567.25)
+
+
+class TestGcpSchema:
+    def test_preempted_flag(self):
+        md = GcpProvider().make_metadata(VirtualClock(), "gce-0")
+        assert md.get_preempted() == "FALSE"
+        md.schedule_preempt()
+        assert md.get_preempted() == "TRUE"
+
+    def test_poll_synthesizes_stable_deadline(self):
+        prov = GcpProvider()
+        clock = VirtualClock(start=50.0)
+        md = prov.make_metadata(clock, "gce-0")
+        assert prov.poll(md, "gce-0", clock.now()) == []
+        md.schedule_preempt()                # platform kill at 50 + 30 = 80
+        clock.advance(1.0)
+        (n1,) = prov.poll(md, "gce-0", clock.now())
+        assert n1.kind == PREEMPT_KIND
+        # observation+notice clamped to the platform's actual kill time
+        assert n1.deadline == pytest.approx(80.0)
+        clock.advance(5.0)
+        (n2,) = prov.poll(md, "gce-0", clock.now())
+        # repeated polls of one preemption: same event, same deadline
+        assert n2.event_id == n1.event_id and n2.deadline == n1.deadline
+
+    def test_poll_after_kill_time_has_no_budget(self):
+        prov = GcpProvider()
+        clock = VirtualClock()
+        md = prov.make_metadata(clock, "gce-0")
+        md.schedule_preempt()                # kill at t=30
+        clock.advance(45.0)                  # a long step ran past the kill
+        (n,) = prov.poll(md, "gce-0", clock.now())
+        assert n.deadline <= 30.0 < clock.now()   # zero/negative budget
+
+
+class TestPools:
+    @pytest.mark.parametrize("name,prefix", [("azure", "vm-"), ("aws", "i-"),
+                                             ("gcp", "gce-")])
+    def test_replacement_and_naming(self, name, prefix):
+        prov = get_provider(name)
+        clock = VirtualClock()
+        pool = prov.make_pool(clock, PeriodicEviction(200.0),
+                              provisioning_delay_s=20.0)
+        pool.start()
+        first = pool.wait_for_instance()
+        assert first.name.startswith(prefix)
+        clock.advance(201.0)
+        pool.tick()                                   # eviction announced
+        clock.advance(prov.notice_s + 1.0)
+        pool.tick()                                   # dead
+        second = pool.wait_for_instance()
+        assert second.name != first.name
+        assert pool.instances_created == 2
+
+    def test_aws_rebalance_precedes_eviction(self):
+        prov = AwsProvider()
+        clock = VirtualClock()
+        pool = prov.make_pool(clock, PeriodicEviction(1000.0))
+        pool.start()
+        inst = pool.wait_for_instance()
+        clock.advance(750.0)                          # lead is 300 s
+        pool.tick()
+        assert inst.metadata.get_rebalance_recommendation() is not None
+        assert inst.metadata.get_instance_action() is None
+        assert pool.rebalance_recommendations == 1
+
+
+class TestCoordinatorIntegration:
+    @pytest.mark.parametrize("name", ["azure", "aws", "gcp"])
+    def test_termination_checkpoint_on_preempt(self, tmp_path, name):
+        prov = get_provider(name)
+        coord, md, clock, store = make_coord(tmp_path / name, prov)
+        prov.simulate_eviction(md)
+        clock.advance(2.0)
+        sig = coord.on_step_end(7, lambda: state(7))
+        assert sig is Signal.PREEMPTING
+        assert coord.stats.termination_ckpts == 1
+        got, man = store.restore(state(0))
+        assert man.kind == "termination" and got["step"] == 7
+        # provider tags recorded in the manifest
+        assert man.extra["provider"] == name
+        assert man.extra["instance"] == "inst-0"
+
+    def test_aws_rebalance_triggers_proactive_ckpt(self, tmp_path):
+        prov = AwsProvider()
+        coord, md, clock, store = make_coord(tmp_path, prov)
+        md.announce_rebalance()
+        clock.advance(2.0)
+        sig = coord.on_step_end(3, lambda: state(3))
+        assert sig is Signal.CONTINUE                 # keep training
+        coord.flush()
+        assert coord.stats.rebalance_ckpts == 1
+        assert store.committed_steps() == [3]
+        # the recommendation is handled once
+        clock.advance(2.0)
+        coord.on_step_end(4, lambda: state(4))
+        coord.flush()
+        assert coord.stats.rebalance_ckpts == 1
+
+    def test_rebalance_opt_out(self, tmp_path):
+        prov = AwsProvider()
+        policy = CheckpointPolicy(periodic_interval_s=1e9,
+                                  checkpoint_on_rebalance=False)
+        coord, md, clock, store = make_coord(tmp_path, prov, policy=policy)
+        md.announce_rebalance()
+        clock.advance(2.0)
+        assert coord.on_step_end(1, lambda: state(1)) is Signal.CONTINUE
+        coord.flush()
+        assert store.committed_steps() == []
+
+
+class TestTrainerAcrossProviders:
+    """Acceptance: the trainer completes under eviction on every backend with
+    identical checkpoint/restore invariants (latest-valid restore, atomic
+    commit via the shared store machinery)."""
+
+    @pytest.mark.parametrize("name", ["azure", "aws", "gcp"])
+    def test_completes_under_eviction(self, tmp_path, name):
+        from repro.configs import get_smoke_config
+        from repro.optim import AdamWConfig
+        from repro.train import SpotTrainer, TrainJob
+
+        prov = get_provider(name)
+        clock = VirtualClock()
+        acct = CostAccountant(prov.prices)
+        pool = prov.make_pool(clock, PeriodicEviction(250.0), acct,
+                              provisioning_delay_s=60.0)
+        store = CheckpointStore(str(tmp_path / name), time_fn=clock.now)
+        coord = SpotOnCoordinator(store, CheckpointPolicy.transparent(100.0),
+                                  clock, provider=prov, time_model=TimeModel())
+        cfg = get_smoke_config("phi3_mini_3p8b")
+        job = TrainJob(cfg=cfg, opt=AdamWConfig(total_steps=40), total_steps=40,
+                       n_stages=2, batch=2, seq_len=16)
+        rep = SpotTrainer(job, coord, pool, clock, step_time_s=10.0,
+                          max_sessions=40).run()
+        coord.close()
+        assert rep.completed
+        assert rep.evictions_seen >= 1 and rep.restores >= 1
+        assert rep.lost_steps == 0          # termination ckpt caught the frontier
+        assert rep.extra["provider"] == name
+        # every committed checkpoint remains valid + restorable (atomicity)
+        latest = store.latest_valid()
+        assert latest is not None
+        assert acct.summary(clock.now())["spot_usd"] > 0
+
+
+class TestStragglerRearm:
+    def test_rearms_after_fire(self):
+        from repro.core import StragglerDetector
+        det = StragglerDetector(factor=2.0, min_samples=5, patience=2)
+        for _ in range(10):
+            det.observe(1.0)
+        assert not det.observe(9.0)
+        assert det.observe(9.0)            # fires after `patience` slow steps
+        # window reset: the replacement's steps cannot be condemned by stale
+        # samples — even persistent slowness needs min_samples fresh data
+        for _ in range(4):
+            assert not det.observe(9.0)
+        assert not det.observe(9.0)        # still below min_samples
