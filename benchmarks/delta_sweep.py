@@ -1,0 +1,76 @@
+"""Delta vs. full checkpointing sweep — bytes written and save latency as a
+function of parameter churn.
+
+The paper's core economics: checkpoint cost bounds how often you can afford
+to checkpoint, and how much an eviction can destroy. Incremental saves cut
+the written bytes to the churn since the last committed step, so this sweep
+reports, per churn rate, the physical bytes and wall latency of full (v1
+shard files) vs delta (content-addressed chunk pool) saves over a short run
+of steps.
+
+    PYTHONPATH=src python -m benchmarks.delta_sweep
+"""
+
+from __future__ import annotations
+
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+from repro.checkpoint import CheckpointStore
+
+CHURN_RATES = (0.01, 0.10, 0.50, 1.00)
+N_TENSORS = 16
+ROWS, COLS = 256, 1024          # 16 x 1 MB = 16 MB of f32 state
+STEPS = 4                       # step 0 is the cold (full) write
+
+
+def make_state(step: int, churn: float) -> dict:
+    """Deterministic state where `churn` of each tensor's rows move per step."""
+    rng = np.random.default_rng(1234)
+    base = {f"w{i}": rng.standard_normal((ROWS, COLS)).astype(np.float32)
+            for i in range(N_TENSORS)}
+    dirty_rows = max(1, int(ROWS * churn))
+    for i, w in enumerate(base.values()):
+        w[:dirty_rows] += float(step * (i + 1))
+    base["step"] = step
+    return base
+
+
+def run_store(store: CheckpointStore, churn: float) -> tuple[float, float]:
+    """Returns (mean bytes written, mean latency seconds) over warm steps."""
+    t_bytes, t_lat = [], []
+    for step in range(STEPS):
+        state = make_state(step, churn)
+        t0 = time.perf_counter()
+        info = store.save(step, state)
+        lat = time.perf_counter() - t0
+        if step > 0:            # step 0 is the cold full write for both modes
+            t_bytes.append(info.new_bytes)
+            t_lat.append(lat)
+    return float(np.mean(t_bytes)), float(np.mean(t_lat))
+
+
+def main() -> None:
+    print("churn,mode,bytes_written,save_ms,bytes_vs_full")
+    for churn in CHURN_RATES:
+        results = {}
+        for mode in ("full", "delta"):
+            td = tempfile.mkdtemp(prefix=f"spoton_delta_{mode}_")
+            try:
+                store = CheckpointStore(td, mode=mode, retention=2,
+                                        chunk_size=64 * 1024)
+                results[mode] = run_store(store, churn)
+            finally:
+                shutil.rmtree(td, ignore_errors=True)
+        full_bytes = results["full"][0]
+        for mode in ("full", "delta"):
+            b, lat = results[mode]
+            rel = b / full_bytes if full_bytes else float("nan")
+            print(f"{churn:.2f},{mode},{b:.0f},{lat * 1e3:.1f},{rel:.3f}")
+
+
+if __name__ == "__main__":
+    main()

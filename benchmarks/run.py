@@ -9,6 +9,7 @@ Sections:
   fig3     — paper Fig. 3 app vs transparent time
   fleet    — beyond-paper: per-provider (azure/aws/gcp) + mixed-fleet sweep
   term     — beyond-paper: termination-ckpt window feasibility (+int8 moments)
+  delta    — beyond-paper: delta vs full checkpoint bytes/latency by churn
   micro    — microbenchmarks: checkpoint save/restore/extract throughput
   roofline — roofline table from the dry-run JSONs (if present)
 """
@@ -66,7 +67,7 @@ def micro():
 
 def main() -> None:
     want = set(sys.argv[1:]) or {"table1", "fig2", "fig3", "fleet", "term",
-                                 "micro", "roofline"}
+                                 "delta", "micro", "roofline"}
     if "table1" in want:
         section("Table I: execution time under Spot-on (virtual-time replay)")
         from . import table1
@@ -87,6 +88,10 @@ def main() -> None:
         section("E5: termination-checkpoint window feasibility")
         from . import term_ckpt_window
         term_ckpt_window.main()
+    if "delta" in want:
+        section("delta: incremental vs full checkpoint sweep by churn rate")
+        from . import delta_sweep
+        delta_sweep.main()
     if "micro" in want:
         section("micro: checkpoint path throughput")
         micro()

@@ -1,11 +1,14 @@
 """Distributed checkpoint substrate: serialization, sharded save/restore,
-atomic store, async writer. See DESIGN.md §3."""
+atomic store with incremental (delta) chunk pool, async writer.
+See DESIGN.md §3."""
 
 from .async_ckpt import AsyncCheckpointer
+from .chunkstore import ChunkPool, ChunkRef, DeltaIndex
 from .sharded import CheckpointReader, Snapshot, extract_snapshot, restore_to_template
 from .store import CheckpointInfo, CheckpointStore
 
 __all__ = [
     "AsyncCheckpointer", "CheckpointInfo", "CheckpointReader", "CheckpointStore",
+    "ChunkPool", "ChunkRef", "DeltaIndex",
     "Snapshot", "extract_snapshot", "restore_to_template",
 ]

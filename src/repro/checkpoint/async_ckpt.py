@@ -11,6 +11,14 @@ Termination checkpoints (eviction notice received) use ``save_urgent``: the
 pending queue is drained/discarded in favour of the newest state and the call
 blocks until the checkpoint is durably committed — the best-effort window is
 the eviction notice (≥30 s), so latency, not overlap, is the goal there.
+
+With a delta-mode store both paths are incremental: a periodic save writes
+only chunks dirtied since the last committed state, and an urgent save reuses
+every unchanged chunk of the last snapshot already in the pool — the
+notice-window write is the churn since the previous checkpoint, not the full
+state. Completed writes are published via ``drain_completed`` so the
+coordinator can account *physical* bytes (``CheckpointInfo.new_bytes``)
+without blocking on the writer thread.
 """
 
 from __future__ import annotations
@@ -41,6 +49,7 @@ class AsyncCheckpointer:
         self._lock = threading.Lock()
         self._last_error: BaseException | None = None
         self._inflight: _Job | None = None
+        self._completed: list[CheckpointInfo] = []
         self._thread = threading.Thread(target=self._worker, daemon=True,
                                         name="spoton-ckpt-writer")
         self._thread.start()
@@ -57,6 +66,8 @@ class AsyncCheckpointer:
             try:
                 job.result = self.store.save_snapshot(
                     job.snapshot, kind=job.kind, extra=job.extra)
+                with self._lock:
+                    self._completed.append(job.result)
             except BaseException as e:  # surfaced on next call / wait
                 job.error = e
                 with self._lock:
@@ -112,6 +123,14 @@ class AsyncCheckpointer:
             raise RuntimeError("termination checkpoint failed") from job.error
         assert job.result is not None
         return job.result
+
+    def drain_completed(self) -> list[CheckpointInfo]:
+        """Pop infos of writes finished since the last drain (all kinds,
+        including urgent saves — callers that already accounted an urgent
+        save's result should filter on ``kind``)."""
+        with self._lock:
+            done, self._completed = self._completed, []
+        return done
 
     def wait_until_finished(self) -> None:
         self._queue.join()

@@ -1,0 +1,273 @@
+"""Content-addressed chunk pool — the substrate of incremental checkpoints.
+
+Every tensor payload is split into fixed-size chunks; each chunk is stored
+once in a pool shared by all checkpoints under the store root::
+
+    <root>/chunks/<hh>/<hash>      # hh = first two hex chars (fan-out)
+
+The address is the blake2b digest of the *stored* (post-quantize,
+post-compress) bytes, so a pool file's content always equals its name's
+preimage — self-verifying, and idempotent under concurrent writers: two
+fleet members encoding the same state produce byte-identical chunks and race
+benignly on an ``os.replace`` of identical content.
+
+Delta saves fall out of content addressing: a chunk whose bytes did not
+change since the last committed step already exists in the pool, so ``write``
+degenerates to an mtime touch and the save writes only dirty chunks. The
+``DeltaIndex`` memo makes the common case cheap — it remembers the raw-bytes
+digest of each (leaf, piece, chunk) position from the previous save, so an
+unchanged chunk skips the compressor as well, not just the disk write. A memo
+hit is trusted only after ``touch`` confirms the pool file still exists (the
+chunk may have been swept since), so the memo can never dangle.
+
+Sweeping the pool is refcount-aware by construction: the store's gc unions
+the chunk references of every committed manifest (plus in-process pins for
+saves in flight) and removes only unreferenced files older than an age gate —
+the same staleness discipline the staging-dir sweep uses for writers on other
+hosts of the shared volume. ``touch`` on reuse keeps a chunk's mtime fresh
+while any writer still depends on it.
+
+Compression runs per chunk on a process-wide worker pool (zlib/zstd and
+blake2b release the GIL), so encode overlaps across tensors instead of
+running single-threaded.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import os
+import threading
+import uuid
+import zlib
+from concurrent.futures import ThreadPoolExecutor
+from dataclasses import dataclass
+from typing import Callable, Iterator
+
+from . import serialize as ser
+
+CHUNKS_DIRNAME = "chunks"
+DEFAULT_CHUNK_SIZE = 1 << 20          # 1 MiB: dedup granularity vs. ref count
+
+_executor: ThreadPoolExecutor | None = None
+_urgent_executor: ThreadPoolExecutor | None = None
+_executor_lock = threading.Lock()
+
+
+def codec_executor() -> ThreadPoolExecutor:
+    """Process-wide encode/compress pool, shared by every store."""
+    global _executor
+    if _executor is None:
+        with _executor_lock:
+            if _executor is None:
+                _executor = ThreadPoolExecutor(
+                    max_workers=min(8, os.cpu_count() or 2),
+                    thread_name_prefix="spoton-codec")
+    return _executor
+
+
+def urgent_executor() -> ThreadPoolExecutor:
+    """Reserved lane for termination checkpoints: an urgent save's encode
+    jobs must never queue behind other fleet members' periodic saves on the
+    shared executor — the eviction-notice window pays for every queued task."""
+    global _urgent_executor
+    if _urgent_executor is None:
+        with _executor_lock:
+            if _urgent_executor is None:
+                _urgent_executor = ThreadPoolExecutor(
+                    max_workers=min(8, os.cpu_count() or 2),
+                    thread_name_prefix="spoton-codec-urgent")
+    return _urgent_executor
+
+
+def chunk_digest(data: bytes) -> str:
+    return hashlib.blake2b(data, digest_size=20).hexdigest()
+
+
+@dataclass(frozen=True)
+class ChunkRef:
+    """One chunk reference inside a manifest-v2 tensor record."""
+
+    hash: str
+    nbytes: int        # stored (encoded) length
+    raw_len: int       # pre-compression length
+    crc32: int         # of the stored bytes (fast validation)
+    comp: str          # "raw" | "zlib" | "zstd" — how to decode
+
+    def to_json(self) -> dict:
+        return {"h": self.hash, "n": self.nbytes, "r": self.raw_len,
+                "c": self.crc32, "k": self.comp}
+
+    @staticmethod
+    def from_json(d: dict) -> "ChunkRef":
+        return ChunkRef(hash=d["h"], nbytes=d["n"], raw_len=d["r"],
+                        crc32=d["c"], comp=d["k"])
+
+
+class ChunkPool:
+    def __init__(self, root: str):
+        self.root = root
+
+    def path(self, h: str) -> str:
+        return os.path.join(self.root, h[:2], h)
+
+    def touch(self, h: str) -> bool:
+        """Refresh mtime (protects the chunk from age-gated sweeps by other
+        writers); False if the chunk is not in the pool."""
+        try:
+            os.utime(self.path(h))
+            return True
+        except OSError:
+            return False
+
+    def check(self, h: str, nbytes: int) -> bool:
+        """Cheap dedup-reuse guard: the pooled file exists with the expected
+        stored size (one stat — no content read on the hot path)."""
+        try:
+            return os.path.getsize(self.path(h)) == nbytes
+        except OSError:
+            return False
+
+    def write(self, h: str, data: bytes) -> int:
+        """Idempotent put; returns bytes physically written (0 on dedup hit).
+
+        A dedup hit is size-verified: an existing file with the wrong length
+        (truncated by a crashed writer, damaged in place) is overwritten
+        rather than reused, so a save never extends the blast radius of a
+        bad pool entry it could have repaired for free."""
+        path = self.path(h)
+        if self.check(h, len(data)):
+            self.touch(h)
+            return 0
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        tmp = path + f".tmp-{uuid.uuid4().hex[:8]}"
+        with open(tmp, "wb") as f:
+            f.write(data)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)       # atomic: readers never see partial chunks
+        return len(data)
+
+    def read(self, ref: ChunkRef) -> bytes:
+        path = self.path(ref.hash)
+        with open(path, "rb") as f:
+            data = f.read()
+        if zlib.crc32(data) != ref.crc32:
+            # self-heal: the file provably does not hold its address's
+            # content, so removing it is always safe — the next save of the
+            # same content rewrites it instead of dedup-reusing the damage
+            try:
+                os.remove(path)
+            except OSError:
+                pass
+            raise IOError(f"chunk {ref.hash}: crc mismatch (corrupt pool "
+                          "entry removed; rewritten on next save)")
+        return data
+
+    def entries(self) -> Iterator[tuple[str, str, bool]]:
+        """One walk over the pool: yields (name, path, is_tmp). Tmp files are
+        crashed mid-write leftovers — the gc sweeps them by age."""
+        try:
+            shards = os.listdir(self.root)
+        except FileNotFoundError:
+            return
+        for hh in shards:
+            sub = os.path.join(self.root, hh)
+            try:
+                names = os.listdir(sub)
+            except (NotADirectoryError, FileNotFoundError):
+                continue
+            for name in names:
+                yield name, os.path.join(sub, name), ".tmp-" in name
+
+    def all_chunks(self) -> Iterator[tuple[str, str]]:
+        """Yield (hash, path) for every committed pool entry."""
+        for name, path, is_tmp in self.entries():
+            if not is_tmp:
+                yield name, path
+
+
+@dataclass(frozen=True)
+class _MemoEntry:
+    raw_digest: str
+    codec: str
+    ref: ChunkRef
+
+
+class DeltaIndex:
+    """Per-store memo: last stored chunk per (leaf, piece, chunk) position.
+
+    Purely an optimization — a miss (fresh process, other writer's step,
+    swept chunk) just re-encodes; a stale hit is impossible because the key
+    is the raw-content digest plus codec, and the pooled file is re-checked
+    for existence on every reuse."""
+
+    def __init__(self):
+        self._map: dict[tuple, _MemoEntry] = {}
+        self._lock = threading.Lock()
+
+    def get(self, key: tuple) -> _MemoEntry | None:
+        with self._lock:
+            return self._map.get(key)
+
+    def put(self, key: tuple, raw_digest: str, codec: str, ref: ChunkRef) -> None:
+        with self._lock:
+            self._map[key] = _MemoEntry(raw_digest, codec, ref)
+
+
+def iter_chunks(raw: bytes, chunk_size: int) -> Iterator[bytes]:
+    for off in range(0, len(raw), chunk_size):
+        yield raw[off:off + chunk_size]
+
+
+def store_payload_chunks(
+    pool: ChunkPool,
+    key: tuple,
+    raw: bytes,
+    *,
+    codec: str,
+    comp: str,
+    chunk_size: int = DEFAULT_CHUNK_SIZE,
+    index: DeltaIndex | None = None,
+    pin: Callable[[str], None] = lambda h: None,
+) -> tuple[list[ChunkRef], int]:
+    """Chunk one raw tensor payload into the pool.
+
+    Returns (refs, bytes_physically_written). ``pin`` is called with each
+    referenced hash *before* the chunk is relied upon, so the store's gc can
+    keep in-flight references alive until the manifest commits.
+    """
+    refs: list[ChunkRef] = []
+    written = 0
+    for ci, raw_chunk in enumerate(iter_chunks(raw, chunk_size)):
+        rd = chunk_digest(raw_chunk)
+        memo = index.get((key, ci)) if index is not None else None
+        if (memo is not None and memo.raw_digest == rd and memo.codec == codec
+                and pool.check(memo.ref.hash, memo.ref.nbytes)):
+            # still pooled at the expected size -> skip encode+write
+            pin(memo.ref.hash)
+            pool.touch(memo.ref.hash)
+            refs.append(memo.ref)
+            continue
+        enc = ser.compress_bytes(raw_chunk, comp)
+        k = comp or "raw"
+        if comp and len(enc) >= len(raw_chunk):
+            enc, k = raw_chunk, "raw"         # compression didn't pay here
+        # stored-raw chunks share the raw digest — don't hash 2x
+        h = rd if enc is raw_chunk else chunk_digest(enc)
+        pin(h)
+        written += pool.write(h, enc)
+        ref = ChunkRef(hash=h, nbytes=len(enc), raw_len=len(raw_chunk),
+                       crc32=zlib.crc32(enc), comp=k)
+        if index is not None:
+            index.put((key, ci), rd, codec, ref)
+        refs.append(ref)
+    return refs, written
+
+
+def read_payload_chunks(pool: ChunkPool, refs: list[dict]) -> bytes:
+    """Reassemble a tensor's raw payload from its manifest chunk refs."""
+    parts = []
+    for d in refs:
+        ref = ChunkRef.from_json(d)
+        parts.append(ser.decompress_bytes(pool.read(ref), ref.comp))
+    return b"".join(parts)

@@ -45,26 +45,38 @@ def parse_step(dirname: str) -> int | None:
 
 @dataclass
 class Manifest:
-    """Global description of one checkpoint."""
+    """Global description of one checkpoint.
+
+    ``format_version`` 1: tensor records carry a ``file`` key pointing into a
+    shard container inside the step dir. Version 2 (incremental/delta):
+    records instead carry ``chunks`` — references into the store's shared
+    content-addressed pool (``<root>/chunks/``) — plus ``raw_nbytes``;
+    ``chunk_size`` records the split used at save time. Readers dispatch per
+    record, so v1 checkpoints written before the delta subsystem stay
+    restorable through the same code path."""
 
     step: int
     kind: str                      # "transparent" | "application" | "termination"
     created_at: float
-    tensors: list[dict]            # TensorRecord JSONs with added "file" key
+    tensors: list[dict]            # TensorRecord JSONs (+ "file" v1 / "chunks" v2)
     leaf_order: list[str]          # pytree leaf names in treedef order
     treedef_repr: str              # human-readable treedef (debugging aid)
     mesh: dict                     # {"shape": [...], "axes": [...]} at save time
     extra: dict[str, Any] = field(default_factory=dict)  # small JSON state
     format_version: int = 1
+    chunk_size: int | None = None  # v2 only
 
     def to_json(self) -> dict:
-        return {
+        d = {
             "format_version": self.format_version, "step": self.step,
             "kind": self.kind, "created_at": self.created_at,
             "tensors": self.tensors, "leaf_order": self.leaf_order,
             "treedef_repr": self.treedef_repr, "mesh": self.mesh,
             "extra": self.extra,
         }
+        if self.chunk_size is not None:
+            d["chunk_size"] = self.chunk_size
+        return d
 
     @staticmethod
     def from_json(d: dict) -> "Manifest":
@@ -74,7 +86,16 @@ class Manifest:
             treedef_repr=d.get("treedef_repr", ""), mesh=d.get("mesh", {}),
             extra=d.get("extra", {}),
             format_version=d.get("format_version", 1),
+            chunk_size=d.get("chunk_size"),
         )
+
+    def chunk_hashes(self) -> set[str]:
+        """All pool chunk hashes this manifest references (empty for v1)."""
+        out: set[str] = set()
+        for rec in self.tensors:
+            for c in rec.get("chunks", ()):
+                out.add(c["h"])
+        return out
 
 
 def write_manifest(dirpath: str, manifest: Manifest) -> None:

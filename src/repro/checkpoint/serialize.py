@@ -162,35 +162,77 @@ def resolve_codec(codec: str) -> str:
     return codec
 
 
-def _encode(arr: np.ndarray, codec: str) -> tuple[bytes, float | None]:
-    scale = None
-    if codec.startswith("int8"):
+def split_codec(codec: str) -> tuple[str, str]:
+    """Codec string -> (quantization, compression) halves.
+
+    The delta write path applies the two halves at different granularities:
+    quantization per tensor (the absmax scale is tensor-global), compression
+    per chunk (so unchanged chunks can skip the compressor entirely).
+    """
+    quant = "int8" if codec.startswith("int8") else ""
+    if codec.endswith("zstd"):
+        comp = "zstd"
+    elif codec.endswith("zlib"):
+        comp = "zlib"
+    else:
+        comp = ""
+    return quant, comp
+
+
+def quantize(arr: np.ndarray, quant: str) -> tuple[bytes, float | None]:
+    """Tensor -> contiguous raw payload (+ absmax scale for int8)."""
+    if quant == "int8":
         absmax = float(np.max(np.abs(arr.astype(np.float32)))) if arr.size else 0.0
         scale = absmax / 127.0 if absmax > 0 else 1.0
         q = np.clip(np.round(arr.astype(np.float32) / scale), -127, 127).astype(np.int8)
-        raw = q.tobytes()
-    else:
-        raw = np.ascontiguousarray(arr).tobytes()
-    if codec.endswith("zstd"):
-        raw = zstandard.ZstdCompressor(level=3).compress(raw)
-    elif codec.endswith("zlib"):
-        raw = zlib.compress(raw, 3)
-    return raw, scale
+        return q.tobytes(), scale
+    return np.ascontiguousarray(arr).tobytes(), None
+
+
+def compress_bytes(buf: bytes, comp: str) -> bytes:
+    if comp == "zstd":
+        return zstandard.ZstdCompressor(level=3).compress(buf)
+    if comp == "zlib":
+        return zlib.compress(buf, 3)
+    return buf
+
+
+def decompress_bytes(buf: bytes, comp: str) -> bytes:
+    if comp == "zstd":
+        if not HAVE_ZSTD:
+            raise IOError(
+                "payload was written with the zstd codec but the 'zstandard' "
+                "package is not installed (pip install zstandard)")
+        return zstandard.ZstdDecompressor().decompress(buf)
+    if comp == "zlib":
+        return zlib.decompress(buf)
+    return buf
+
+
+def payload_to_array(raw: bytes, *, dtype_name: str, shape, quant: str,
+                     scale: float | None) -> np.ndarray:
+    """Decoded (decompressed) raw payload -> tensor."""
+    shape = tuple(shape)
+    if quant == "int8":
+        q = np.frombuffer(raw, dtype=np.int8).reshape(shape)
+        return (q.astype(np.float32) * scale).astype(name_to_dtype(dtype_name))
+    return np.frombuffer(raw, dtype=name_to_dtype(dtype_name)).reshape(shape).copy()
+
+
+def _encode(arr: np.ndarray, codec: str) -> tuple[bytes, float | None]:
+    quant, comp = split_codec(codec)
+    raw, scale = quantize(arr, quant)
+    return compress_bytes(raw, comp), scale
 
 
 def _decode(buf: bytes, rec: TensorRecord) -> np.ndarray:
-    if rec.codec.endswith("zstd"):
-        if not HAVE_ZSTD:
-            raise IOError(
-                f"tensor {rec.name!r} was written with the zstd codec but the "
-                "'zstandard' package is not installed (pip install zstandard)")
-        buf = zstandard.ZstdDecompressor().decompress(buf)
-    elif rec.codec.endswith("zlib"):
-        buf = zlib.decompress(buf)
-    if rec.codec.startswith("int8"):
-        q = np.frombuffer(buf, dtype=np.int8).reshape(rec.shape)
-        return (q.astype(np.float32) * rec.scale).astype(name_to_dtype(rec.dtype))
-    return np.frombuffer(buf, dtype=name_to_dtype(rec.dtype)).reshape(rec.shape).copy()
+    quant, comp = split_codec(rec.codec)
+    try:
+        raw = decompress_bytes(buf, comp)
+    except IOError as e:
+        raise IOError(f"tensor {rec.name!r}: {e}") from None
+    return payload_to_array(raw, dtype_name=rec.dtype, shape=rec.shape,
+                            quant=quant, scale=rec.scale)
 
 
 # ---------------------------------------------------------------------------

@@ -25,6 +25,7 @@ this single-process container process 0 owns every shard, same code path.
 from __future__ import annotations
 
 import os
+from concurrent.futures import wait as futures_wait
 from dataclasses import dataclass, field
 from typing import Any, Callable
 
@@ -32,6 +33,7 @@ import numpy as np
 
 import jax
 
+from . import chunkstore
 from . import serialize as ser
 
 Index = tuple[tuple[int, int], ...]
@@ -127,15 +129,87 @@ def write_snapshot(
     return out
 
 
+def _delta_encode_piece(pool, key, arr, codec, chunk_size, index, pin):
+    """Worker-pool task: quantize one piece, chunk it into the pool."""
+    codec = ser.resolve_codec(codec)
+    quant, comp = ser.split_codec(codec)
+    raw, scale = ser.quantize(np.asarray(arr), quant)
+    refs, written = chunkstore.store_payload_chunks(
+        pool, key, raw, codec=codec, comp=comp, chunk_size=chunk_size,
+        index=index, pin=pin)
+    return codec, scale, refs, written, len(raw)
+
+
+def write_snapshot_delta(
+    snapshot: Snapshot,
+    pool: chunkstore.ChunkPool,
+    *,
+    compress: bool = True,
+    quantize_moments: bool = False,
+    chunk_size: int = chunkstore.DEFAULT_CHUNK_SIZE,
+    index: chunkstore.DeltaIndex | None = None,
+    pin=lambda h: None,
+    executor=None,
+) -> tuple[list[dict], int]:
+    """Incremental write: every piece chunked into the shared pool.
+
+    Encode/compress runs on the shared codec executor so serialization
+    overlaps across tensors. Returns (manifest tensor records, bytes
+    physically written) — unchanged chunks cost a hash + an mtime touch, so
+    the second number is the actual churn, not the state size.
+    """
+    ex = executor if executor is not None else chunkstore.codec_executor()
+    jobs = []
+    for name, lp in snapshot.leaves.items():
+        for pi, (idx, arr) in enumerate(lp.pieces):
+            codec = ser.default_codec_for(name, arr, compress=compress,
+                                          quantize_moments=quantize_moments)
+            fut = ex.submit(_delta_encode_piece, pool, (name, pi), arr, codec,
+                            chunk_size, index, pin)
+            jobs.append((name, pi, idx, lp, arr, fut))
+    try:
+        results = [fut.result() for *_rest, fut in jobs]
+    except BaseException:
+        # quiesce before propagating: a straggler task must not call pin()
+        # after the caller has already unpinned this save's chunks
+        for *_rest, fut in jobs:
+            fut.cancel()
+        futures_wait([fut for *_rest, fut in jobs])
+        raise
+    records = []
+    new_bytes = 0
+    for (name, pi, idx, lp, arr, fut), res in zip(jobs, results):
+        codec, scale, refs, written, raw_len = res
+        new_bytes += written
+        rec = ser.TensorRecord(
+            name=f"{name}#{pi}", dtype=ser.dtype_to_name(np.asarray(arr).dtype),
+            shape=tuple(np.asarray(arr).shape), global_shape=lp.global_shape,
+            index=idx, nbytes=sum(r.nbytes for r in refs), crc32=0,
+            codec=codec, scale=scale)
+        d = rec.to_json()
+        d["chunks"] = [r.to_json() for r in refs]
+        d["raw_nbytes"] = raw_len
+        records.append(d)
+    return records, new_bytes
+
+
 # ---------------------------------------------------------------------------
 # restore
 # ---------------------------------------------------------------------------
 
 class CheckpointReader:
-    """Random access over a committed checkpoint's tensors."""
+    """Random access over a committed checkpoint's tensors.
 
-    def __init__(self, ckpt_dir: str, tensor_records: list[dict]):
+    Reads both manifest formats: v1 records point into per-process shard
+    container files inside the step dir; v2 (delta) records carry chunk
+    references into the store's shared content-addressed pool."""
+
+    def __init__(self, ckpt_dir: str, tensor_records: list[dict],
+                 chunk_pool: chunkstore.ChunkPool | None = None):
         self.ckpt_dir = ckpt_dir
+        self.chunk_pool = chunk_pool or chunkstore.ChunkPool(
+            os.path.join(os.path.dirname(os.path.abspath(ckpt_dir)),
+                         chunkstore.CHUNKS_DIRNAME))
         self._readers: dict[str, ser.ShardFileReader] = {}
         # name -> list of (record, file)
         self.by_name: dict[str, list[dict]] = {}
@@ -147,6 +221,15 @@ class CheckpointReader:
         if fname not in self._readers:
             self._readers[fname] = ser.ShardFileReader(os.path.join(self.ckpt_dir, fname))
         return self._readers[fname]
+
+    def _read_piece(self, rec: dict) -> np.ndarray:
+        if "chunks" in rec:
+            raw = chunkstore.read_payload_chunks(self.chunk_pool, rec["chunks"])
+            quant, _comp = ser.split_codec(rec.get("codec", "raw"))
+            return ser.payload_to_array(
+                raw, dtype_name=rec["dtype"], shape=rec["shape"],
+                quant=quant, scale=rec.get("scale"))
+        return self._reader(rec["file"]).read(rec["name"])
 
     def global_shape(self, name: str) -> tuple[int, ...]:
         return tuple(self.by_name[name][0]["global_shape"])
@@ -171,7 +254,7 @@ class CheckpointReader:
             inter = tuple((max(a0, b0), min(a1, b1)) for (a0, a1), (b0, b1) in zip(index, pidx))
             if any(lo >= hi for lo, hi in inter):
                 continue
-            piece = self._reader(rec["file"]).read(rec["name"])
+            piece = self._read_piece(rec)
             src = tuple(slice(lo - b0, hi - b0) for (lo, hi), (b0, _) in zip(inter, pidx))
             dst = tuple(slice(lo - a0, hi - a0) for (lo, hi), (a0, _) in zip(inter, index))
             out[dst] = piece[src]
@@ -183,10 +266,10 @@ class CheckpointReader:
         return out
 
     def validate(self) -> None:
-        """Full-content crc validation of every piece."""
+        """Full-content crc validation of every piece (per-chunk for v2)."""
         for name, recs in self.by_name.items():
             for rec in recs:
-                self._reader(rec["file"]).read(rec["name"])
+                self._read_piece(rec)
 
 
 def _idx_of_slices(slices, shape) -> Index:

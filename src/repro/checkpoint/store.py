@@ -12,6 +12,13 @@ the same ``root``. Its invariants:
   in the paper ("automatically searches for the most recent valid checkpoint").
 * **Retention** — keep the newest K committed checkpoints (bounded NFS bill;
   the cost model charges provisioned bytes).
+* **Incremental saves** (``mode="delta"``, the default) — tensor payloads are
+  chunked into a content-addressed pool shared by all steps
+  (``<root>/chunks/<hh>/<hash>``); a save writes only chunks whose content
+  changed since the last committed state, and the manifest (v2) records
+  per-tensor chunk references so any retained step reassembles from the pool.
+  ``mode="full"`` keeps the original self-contained v1 shard files; both
+  formats restore through the same reader.
 """
 
 from __future__ import annotations
@@ -21,9 +28,11 @@ import shutil
 import threading
 import time
 import uuid
+from collections import Counter
 from dataclasses import dataclass
 from typing import Any, Callable
 
+from . import chunkstore
 from . import manifest as mf
 from . import sharded
 
@@ -33,8 +42,9 @@ class CheckpointInfo:
     step: int
     path: str
     kind: str
-    nbytes: int
+    nbytes: int          # logical encoded size of the checkpoint
     elapsed_s: float
+    new_bytes: int = 0   # bytes physically written (== nbytes for full saves)
 
 
 class CheckpointStore:
@@ -46,16 +56,28 @@ class CheckpointStore:
         validate_on_restore: bool = False,
         compress: bool = True,
         quantize_moments: bool = False,
+        mode: str = "delta",
+        chunk_size: int = chunkstore.DEFAULT_CHUNK_SIZE,
         time_fn: Callable[[], float] = time.time,
         tags: dict | None = None,
         fault_injector: Callable[[str], None] | None = None,
     ):
+        if mode not in ("delta", "full"):
+            raise ValueError(f"mode must be 'delta' or 'full', got {mode!r}")
         self.root = root
         self.retention = retention
         self.validate_on_restore = validate_on_restore
         self.compress = compress
         self.quantize_moments = quantize_moments
+        self.mode = mode
+        self.chunk_size = chunk_size
         self.time_fn = time_fn
+        self.pool = chunkstore.ChunkPool(os.path.join(root, chunkstore.CHUNKS_DIRNAME))
+        self._delta_index = chunkstore.DeltaIndex()
+        # chunk hashes referenced by saves in flight (manifest not yet
+        # committed) — the pool sweep must never remove these
+        self._pin_lock = threading.Lock()
+        self._pinned_chunks: Counter[str] = Counter()
         # store-level provenance (e.g. {"provider": "aws", "fleet": "f0"})
         # merged under every manifest's extras; per-save extras win on clash.
         self.tags = dict(tags or {})
@@ -73,6 +95,18 @@ class CheckpointStore:
 
     # -- write ---------------------------------------------------------------
 
+    def _pin(self, h: str, pinned: list) -> None:
+        with self._pin_lock:
+            self._pinned_chunks[h] += 1
+        pinned.append(h)
+
+    def _unpin_all(self, pinned: list) -> None:
+        with self._pin_lock:
+            for h in pinned:
+                self._pinned_chunks[h] -= 1
+                if self._pinned_chunks[h] <= 0:
+                    del self._pinned_chunks[h]
+
     def save_snapshot(self, snapshot: sharded.Snapshot, *, kind: str = "transparent",
                       extra: dict | None = None) -> CheckpointInfo:
         t0 = self.time_fn()
@@ -81,16 +115,35 @@ class CheckpointStore:
         os.makedirs(stage, exist_ok=True)
         with self._stage_lock:
             self._inflight_stages.add(stage)
+        pinned: list[str] = []
         try:
-            records = sharded.write_snapshot(
-                stage, snapshot, compress=self.compress,
-                quantize_moments=self.quantize_moments)
+            if self.mode == "delta":
+                # dirty chunks land in the shared pool (atomic, idempotent
+                # per chunk); the step dir itself holds only the manifest, so
+                # the stage->rename->marker protocol is unchanged. Chunks from
+                # a writer killed here are orphans, swept by gc once old.
+                # Termination saves encode on a reserved executor so the
+                # notice window never queues behind periodic save traffic.
+                records, new_bytes = sharded.write_snapshot_delta(
+                    snapshot, self.pool, compress=self.compress,
+                    quantize_moments=self.quantize_moments,
+                    chunk_size=self.chunk_size, index=self._delta_index,
+                    pin=lambda h: self._pin(h, pinned),
+                    executor=(chunkstore.urgent_executor()
+                              if kind == "termination" else None))
+            else:
+                records = sharded.write_snapshot(
+                    stage, snapshot, compress=self.compress,
+                    quantize_moments=self.quantize_moments)
+                new_bytes = sum(r["nbytes"] for r in records)
             self.fault_injector("shards_written")
             man = mf.Manifest(
                 step=snapshot.step, kind=kind, created_at=self.time_fn(),
                 tensors=records, leaf_order=snapshot.leaf_order,
                 treedef_repr=snapshot.treedef_repr, mesh=snapshot.mesh,
-                extra={**self.tags, **(extra or {})})
+                extra={**self.tags, **(extra or {})},
+                format_version=2 if self.mode == "delta" else 1,
+                chunk_size=self.chunk_size if self.mode == "delta" else None)
             mf.write_manifest(stage, man)
             self.fault_injector("manifest_written")
             with self._commit_lock:
@@ -111,10 +164,15 @@ class CheckpointStore:
         finally:
             with self._stage_lock:
                 self._inflight_stages.discard(stage)
+            self._unpin_all(pinned)
         nbytes = sum(r["nbytes"] for r in records)
         info = CheckpointInfo(step=snapshot.step, path=final, kind=kind,
-                              nbytes=nbytes, elapsed_s=self.time_fn() - t0)
-        self.gc()
+                              nbytes=nbytes, elapsed_s=self.time_fn() - t0,
+                              new_bytes=new_bytes)
+        # sweep_chunks=None: walk the pool only when retention actually
+        # dropped a step — a full pool scan on every commit would sit inside
+        # the urgent termination path for no reclaimable garbage
+        self.gc(sweep_chunks=None)
         return info
 
     def save(self, step: int, state, *, kind: str = "transparent",
@@ -143,7 +201,8 @@ class CheckpointStore:
         path = os.path.join(self.root, mf.step_dirname(step))
         try:
             man = mf.read_manifest(path)
-            reader = sharded.CheckpointReader(path, man.tensors)
+            reader = sharded.CheckpointReader(path, man.tensors,
+                                              chunk_pool=self.pool)
             if validate:
                 reader.validate()
             return man, reader
@@ -174,8 +233,14 @@ class CheckpointStore:
 
     # -- maintenance -----------------------------------------------------------
 
-    def gc(self, *, stale_staging_age_s: float = 3600.0) -> list[int]:
-        """Keep the newest `retention` committed checkpoints; drop the rest."""
+    def gc(self, *, stale_staging_age_s: float = 3600.0,
+           stale_chunk_age_s: float = 3600.0,
+           sweep_chunks: bool | None = True) -> list[int]:
+        """Keep the newest `retention` committed checkpoints; drop the rest.
+
+        ``sweep_chunks``: True sweeps the chunk pool now; None (the per-save
+        default) sweeps only when this call doomed a step — the only event
+        that makes pool entries newly unreferenced."""
         steps = self.committed_steps()
         doomed = steps[:-self.retention] if self.retention > 0 else []
         for step in doomed:
@@ -198,7 +263,44 @@ class CheckpointStore:
             except OSError:
                 pass  # already gone (or unreadable): try the sweep anyway
             shutil.rmtree(path, ignore_errors=True)
+        if sweep_chunks or (sweep_chunks is None and doomed):
+            self._gc_chunks(stale_chunk_age_s)
         return doomed
+
+    def live_chunk_hashes(self) -> set[str]:
+        """Chunks referenced by any committed manifest or an in-flight save."""
+        live: set[str] = set()
+        for step in self.committed_steps():
+            path = os.path.join(self.root, mf.step_dirname(step))
+            try:
+                live |= mf.read_manifest(path).chunk_hashes()
+            except Exception:
+                continue  # unreadable manifest: its step is dead anyway
+        with self._pin_lock:
+            live |= set(self._pinned_chunks)
+        return live
+
+    def _gc_chunks(self, stale_chunk_age_s: float) -> None:
+        """Refcount-aware pool sweep: a chunk referenced by any committed
+        manifest (even one shared across steps) is never removed; unreferenced
+        chunks are removed only past the age gate, which protects writers on
+        other hosts that are mid-save (pool writes and reuse touches keep
+        their chunks' mtimes fresh)."""
+        live = self.live_chunk_hashes()
+        now = time.time()
+        for name, path, is_tmp in self.pool.entries():
+            if not is_tmp and name in live:
+                continue
+            # unreferenced chunk or crashed-writer tmp file: sweep past age
+            try:
+                if now - os.path.getmtime(path) < stale_chunk_age_s:
+                    continue
+            except OSError:
+                pass
+            try:
+                os.remove(path)
+            except OSError:
+                pass
 
     def total_bytes(self) -> int:
         total = 0

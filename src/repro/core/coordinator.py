@@ -18,9 +18,13 @@ Time accounting is delegated to a ``TimeLedger`` (core/ledger.py): when a
 modeled durations to the clock — extract cost for async periodic saves (write
 IO overlaps training), extract+write for blocking termination / stage
 checkpoints, read cost for restores. In wall-clock mode durations are charged
-by physics. Checkpoints written through the coordinator carry
-``{"provider", "instance"}`` tags in their manifest extras, so a fleet's
-shared store records which cloud wrote each checkpoint.
+by physics. With a delta-mode store (the default) write costs are charged on
+``CheckpointInfo.new_bytes`` — the dirty chunks actually pushed to the shared
+volume — not the logical state size; that is precisely why an urgent
+termination checkpoint fits the eviction-notice window at low churn.
+Checkpoints written through the coordinator carry ``{"provider", "instance"}``
+tags in their manifest extras, so a fleet's shared store records which cloud
+wrote each checkpoint.
 """
 
 from __future__ import annotations
@@ -158,6 +162,16 @@ class SpotOnCoordinator:
         coordinator, which owns the cadence across members)."""
         return self._save_periodic(step, state)
 
+    def _drain_async_stats(self) -> None:
+        """Fold finished background writes into the stats. Periodic/rebalance
+        saves account their *physical* bytes here (delta saves write only
+        dirty chunks); urgent saves were accounted synchronously."""
+        if self._async is None:
+            return
+        for info in self._async.drain_completed():
+            if info.kind != "termination":
+                self.stats.ckpt_bytes_written += info.new_bytes
+
     def _save_periodic(self, step: int, state, *, stat: str = "periodic") -> bool:
         t0 = self.clock.now()
         try:
@@ -168,8 +182,9 @@ class SpotOnCoordinator:
             else:
                 snap = extract_snapshot(state, step=step,
                                         mesh_info=self.mesh_info)
-                self.store.save_snapshot(snap, kind="transparent",
-                                         extra=self._tags())
+                info = self.store.save_snapshot(snap, kind="transparent",
+                                                extra=self._tags())
+                self.stats.ckpt_bytes_written += info.new_bytes
         except (RuntimeError, OSError) as e:
             # a failed periodic save must not kill training: the committed
             # history is untouched (atomic commit) and the next cadence
@@ -178,15 +193,16 @@ class SpotOnCoordinator:
             self.stats.periodic_failures += 1
             self._last_periodic_at = self.clock.now()
             return False
-        # async: trainer pays only the device->host extract; write overlaps
+        # async: trainer pays only the device->host extract; write overlaps.
+        # sync delta: the write leg moves only dirty chunks (info.new_bytes).
         cost = (self.ledger.extract_s(snap.nbytes) if self._async is not None
-                else self.ledger.extract_s(snap.nbytes) + self.ledger.write_s(snap.nbytes))
+                else self.ledger.extract_s(snap.nbytes)
+                + self.ledger.write_s(info.new_bytes))
         self.ledger.charge(cost, category="ckpt")
         if stat == "rebalance":
             self.stats.rebalance_ckpts += 1
         else:
             self.stats.periodic_ckpts += 1
-        self.stats.ckpt_bytes_written += snap.nbytes
         self.stats.ckpt_time_s += (self.clock.now() - t0)
         self._last_periodic_at = self.clock.now()
         return True
@@ -213,7 +229,11 @@ class SpotOnCoordinator:
             log.warning("termination checkpoint failed: %s", e)
             self.stats.termination_failures += 1
             return False
-        cost = self.ledger.extract_s(nbytes) + self.ledger.write_s(nbytes)
+        # extract covers the full state; the write leg is only the chunks the
+        # urgent save actually pushed — unchanged chunks of the last snapshot
+        # are reused from the pool, which is what keeps the notice-window
+        # write minimal under delta mode
+        cost = self.ledger.extract_s(nbytes) + self.ledger.write_s(info.new_bytes)
         if self.ledger.time_model is not None and cost > budget:
             # virtual-time world: the write would not have finished in time
             self.ledger.charge(budget, category="ckpt")
@@ -221,7 +241,7 @@ class SpotOnCoordinator:
             return False
         self.ledger.charge(cost, category="ckpt")
         self.stats.termination_ckpts += 1
-        self.stats.ckpt_bytes_written += nbytes
+        self.stats.ckpt_bytes_written += info.new_bytes
         self.stats.ckpt_time_s += (self.clock.now() - t0)
         return True
 
@@ -231,13 +251,15 @@ class SpotOnCoordinator:
             return
         t0 = self.clock.now()
         snap = extract_snapshot(state, step=step, mesh_info=self.mesh_info)
-        self.store.save_snapshot(snap, kind="application",
-                                 extra=self._tags(stage=stage))
-        # app-specific saves are synchronous in the app's critical path
+        info = self.store.save_snapshot(snap, kind="application",
+                                        extra=self._tags(stage=stage))
+        # app-specific saves are synchronous in the app's critical path; the
+        # write leg is physical bytes so the APPLICATION-vs-TRANSPARENT
+        # comparison stays symmetric under a delta-mode store
         self.ledger.charge(self.ledger.extract_s(snap.nbytes)
-                           + self.ledger.write_s(snap.nbytes), category="ckpt")
+                           + self.ledger.write_s(info.new_bytes), category="ckpt")
         self.stats.stage_ckpts += 1
-        self.stats.ckpt_bytes_written += snap.nbytes
+        self.stats.ckpt_bytes_written += info.new_bytes
         self.stats.ckpt_time_s += (self.clock.now() - t0)
 
     # -- the per-step hook ----------------------------------------------------------
@@ -262,6 +284,7 @@ class SpotOnCoordinator:
     def on_step_end(self, step: int, state_provider: Callable[[], Any],
                     step_duration_s: float | None = None) -> Signal:
         now = self.clock.now()
+        self._drain_async_stats()
         # 1. metadata poll (rate-limited like the paper's curl loop)
         preempt, rebalance = self._poll_notices(now)
         # 2. eviction imminent
@@ -320,6 +343,7 @@ class SpotOnCoordinator:
             except RuntimeError as e:
                 log.warning("async checkpoint write failed at flush: %s", e)
                 self.stats.periodic_failures += 1
+            self._drain_async_stats()
 
     def close(self) -> None:
         if self._async is not None:
@@ -328,4 +352,5 @@ class SpotOnCoordinator:
             except RuntimeError as e:
                 log.warning("async checkpoint write failed at close: %s", e)
                 self.stats.periodic_failures += 1
+            self._drain_async_stats()
             self._async = None

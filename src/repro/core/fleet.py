@@ -260,8 +260,12 @@ class FleetCoordinator:
             "periodic_failures": sum(m.coordinator.stats.periodic_failures
                                      for m in self.members),
             "rebalance": sum(m.coordinator.stats.rebalance_ckpts for m in self.members),
+            # physical bytes pushed to the shared volume: under a delta-mode
+            # store this is dirty chunks only, far below N_saves x state size
             "bytes_written": sum(m.coordinator.stats.ckpt_bytes_written
                                  for m in self.members),
+            "store_mode": self.store.mode,
+            "store_total_bytes": self.store.total_bytes(),
             "by_provider": {
                 name: {
                     "termination": sum(m.coordinator.stats.termination_ckpts

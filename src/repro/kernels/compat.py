@@ -1,0 +1,20 @@
+"""Pallas TPU API compatibility across JAX versions.
+
+JAX renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams`` (the old
+name was removed after the deprecation cycle; on 0.4.x only the TPU-prefixed
+name exists). Resolve whichever the installed JAX provides by probe so the
+kernels import on both sides of the rename.
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+_CompilerParams = getattr(pltpu, "CompilerParams", None)
+if _CompilerParams is None:
+    _CompilerParams = getattr(pltpu, "TPUCompilerParams")
+
+
+def tpu_compiler_params(**kwargs):
+    """Build TPU compiler params under whichever class name this JAX has."""
+    return _CompilerParams(**kwargs)

@@ -89,6 +89,64 @@ class _Op:
     operands: list[str]
     attrs: str
     line: str
+    # inline operand types ("f32[4,128]{1,0}"), parallel to `operands`; None
+    # when the HLO printer emitted bare names (older XLA elides them)
+    operand_types: list[str | None] = field(default_factory=list)
+
+
+_OPERAND_NAME_RE = re.compile(r"%?([\w.\-]+)$")
+
+
+def _split_call(rest: str) -> tuple[str, str, list[str], list[str | None], str] | None:
+    """Parse ``<ret-type> opcode(operand, ...) attrs`` with balanced parens.
+
+    Operand lists may contain tuple types — ``(s32[], f32[4,2]{1,0}) %arg`` —
+    so both the closing paren and the operand separators must be found at
+    bracket depth 0, not by naive ``split``. Each operand is ``[type] %name``
+    (type optional depending on the XLA printer's verbosity).
+    """
+    mo = _OPCODE_RE.search(rest)
+    if not mo:
+        return None
+    opcode = mo.group(1)
+    ret = rest[:mo.start()].strip()
+    depth = 1
+    i = mo.end()
+    j = i
+    while j < len(rest) and depth:
+        c = rest[j]
+        if c in "([{":
+            depth += 1
+        elif c in ")]}":
+            depth -= 1
+        j += 1
+    operand_text = rest[i:j - 1]
+    attrs = rest[j:]
+    names: list[str] = []
+    types: list[str | None] = []
+    depth = 0
+    start = 0
+    pieces = []
+    for k, c in enumerate(operand_text):
+        if c in "([{":
+            depth += 1
+        elif c in ")]}":
+            depth -= 1
+        elif c == "," and depth == 0:
+            pieces.append(operand_text[start:k])
+            start = k + 1
+    pieces.append(operand_text[start:])
+    for piece in pieces:
+        piece = piece.strip()
+        if not piece:
+            continue
+        mn = _OPERAND_NAME_RE.search(piece)
+        if not mn:
+            continue
+        names.append(mn.group(1))
+        prefix = piece[:mn.start()].rstrip().rstrip("%").rstrip()
+        types.append(prefix or None)
+    return ret, opcode, names, types, attrs
 
 
 class HloModule:
@@ -123,26 +181,29 @@ class HloModule:
             if not m:
                 continue
             name, rest = m.groups()
-            mo = _OPCODE_RE.search(rest)
-            if not mo:
+            parsed = _split_call(rest)
+            if parsed is None:
                 continue
-            opcode = mo.group(1)
-            ret = rest[:mo.start()].strip()
-            tail = rest[mo.end():]
-            operands = tail.split(")", 1)[0]
-            attrs = tail.split(")", 1)[1] if ")" in tail else ""
-            ops = [o.strip().lstrip("%") for o in operands.split(",") if o.strip()]
+            ret, opcode, ops, op_types, attrs = parsed
             self.computations[cur].append(_Op(name, ret, opcode, ops,
-                                              attrs, line_nc))
+                                              attrs, line_nc, op_types))
             self.symtab[cur][name] = ret
         self._memo: dict[str, Costs] = {}
 
     # -- helpers ----------------------------------------------------------------
 
+    def _operand_type(self, comp: str, op: _Op, i: int) -> str:
+        """Type text of operand i: inline annotation first, symtab fallback."""
+        if i >= len(op.operands):
+            return ""
+        if i < len(op.operand_types) and op.operand_types[i]:
+            return op.operand_types[i]
+        return self.symtab[comp].get(op.operands[i], "")
+
     def _operand_bytes(self, comp: str, op: _Op) -> int:
         total = 0
-        for o in op.operands:
-            t = self.symtab[comp].get(o)
+        for i in range(len(op.operands)):
+            t = self._operand_type(comp, op, i)
             if t:
                 total += _shapes_bytes(t)
         return total
@@ -151,7 +212,7 @@ class HloModule:
         out_dims = _first_shape_dims(op.ret)
         if out_dims is None:
             return 0.0
-        lhs_t = self.symtab[comp].get(op.operands[0], "") if op.operands else ""
+        lhs_t = self._operand_type(comp, op, 0)
         lhs_dims = _first_shape_dims(lhs_t) or ()
         mc = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.line)
         contract = 1
@@ -192,8 +253,8 @@ class HloModule:
         adj = 0
         for op in self.computations.get(comp_name, []):
             if op.opcode == "dynamic-update-slice" and len(op.operands) >= 2:
-                target_t = self.symtab[comp_name].get(op.operands[0], "")
-                update_t = self.symtab[comp_name].get(op.operands[1], "")
+                target_t = self._operand_type(comp_name, op, 0)
+                update_t = self._operand_type(comp_name, op, 1)
                 adj += 2 * _shapes_bytes(target_t) - 2 * _shapes_bytes(update_t)
             elif op.opcode == "fusion":
                 mc = re.search(r"calls=%?([\w.\-]+)", op.line)
@@ -238,13 +299,12 @@ class HloModule:
                     b -= self._dus_adjustment(mcal.group(1))
                 total.bytes += max(b, 0)
             elif op.opcode == "dynamic-update-slice":
-                upd = self.symtab[name].get(op.operands[1], "") \
-                    if len(op.operands) >= 2 else ""
+                upd = self._operand_type(name, op, 1)
                 total.bytes += 2 * _shapes_bytes(upd)
             elif op.opcode in ("dynamic-slice", "gather"):
                 total.bytes += 2 * _shapes_bytes(op.ret)
             elif op.opcode == "scatter":
-                upd = self.symtab[name].get(op.operands[-1], "") \
+                upd = self._operand_type(name, op, len(op.operands) - 1) \
                     if op.operands else ""
                 total.bytes += 4 * _shapes_bytes(upd)  # read+write idx'd region
             elif op.opcode == "dot":

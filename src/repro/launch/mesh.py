@@ -15,11 +15,27 @@ HBM_BW = 819e9                  # bytes/s per chip
 ICI_BW = 50e9                   # bytes/s per link
 
 
+def make_mesh(shape, axes, *, devices=None):
+    """``jax.make_mesh`` across the AxisType API drift.
+
+    Newer JAX grew ``jax.sharding.AxisType`` and an ``axis_types`` kwarg on
+    ``make_mesh`` (explicit-sharding meshes); 0.4.x has neither. We always
+    want the default Auto axes, so pass the kwarg only where it exists —
+    probed once on the live module, not by version string.
+    """
+    kwargs = {}
+    if devices is not None:
+        kwargs["devices"] = devices
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        kwargs["axis_types"] = (axis_type.Auto,) * len(axes)
+    return jax.make_mesh(tuple(shape), tuple(axes), **kwargs)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def mesh_info(mesh) -> dict:

@@ -99,6 +99,25 @@ class TestAtomicCommit:
                                 retention=10)
         store.save(1, small_state(1))
         store.save(2, small_state(2))
+        # corrupt a pool chunk referenced by step 2 only (shared chunks must
+        # stay intact or step 1 would be damaged too)
+        man1 = mf.read_manifest(os.path.join(str(tmp_path), mf.step_dirname(1)))
+        man2 = mf.read_manifest(os.path.join(str(tmp_path), mf.step_dirname(2)))
+        only2 = man2.chunk_hashes() - man1.chunk_hashes()
+        assert only2, "steps 1 and 2 differ, so step 2 must own dirty chunks"
+        chunk = store.pool.path(sorted(only2)[0])
+        raw = bytearray(open(chunk, "rb").read())
+        raw[-1] ^= 0xFF
+        open(chunk, "wb").write(bytes(raw))
+        state, man = store.restore(template())
+        assert man.step == 1
+        assert state["step"] == 1
+
+    def test_fallback_to_older_on_corruption_v1(self, tmp_path):
+        store = CheckpointStore(str(tmp_path), validate_on_restore=True,
+                                retention=10, mode="full")
+        store.save(1, small_state(1))
+        store.save(2, small_state(2))
         # corrupt newest shard payload
         d2 = os.path.join(str(tmp_path), mf.step_dirname(2))
         shard = os.path.join(d2, "shard_p000.spot")

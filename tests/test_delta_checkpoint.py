@@ -1,0 +1,228 @@
+"""Incremental (delta) checkpointing: content-addressed chunk dedup, manifest
+v2, refcount-aware pool gc, v1 backward compatibility, urgent-save churn."""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import (AsyncCheckpointer, CheckpointStore, ChunkPool,
+                              ChunkRef)
+from repro.checkpoint import chunkstore
+from repro.checkpoint import manifest as mf
+
+
+def big_state(step, rng_seed=0, churn_frac=0.0):
+    """~2 MB state; `churn_frac` of the big tensor's rows are step-dependent
+    (mostly-frozen model: only a slice of params moves between saves)."""
+    rng = np.random.default_rng(rng_seed)
+    big = rng.standard_normal((512, 1024)).astype(np.float32)
+    if churn_frac > 0:
+        rows = max(1, int(512 * churn_frac))
+        big = big.copy()
+        big[:rows] += float(step)
+    return {"params": {"big": big, "b": np.full((64,), float(step), np.float32)},
+            "step": step}
+
+
+def template():
+    return {"params": {"big": np.zeros((512, 1024), np.float32),
+                       "b": np.zeros((64,), np.float32)},
+            "step": 0}
+
+
+class TestChunkPool:
+    def test_write_is_idempotent_and_content_addressed(self, tmp_path):
+        pool = ChunkPool(str(tmp_path / "chunks"))
+        data = b"x" * 4096
+        h = chunkstore.chunk_digest(data)
+        assert pool.write(h, data) == 4096
+        assert pool.write(h, data) == 0          # dedup hit: touch only
+        import zlib
+        ref = ChunkRef(hash=h, nbytes=4096, raw_len=4096,
+                       crc32=zlib.crc32(data), comp="raw")
+        assert pool.read(ref) == data
+
+    def test_corrupt_chunk_detected(self, tmp_path):
+        pool = ChunkPool(str(tmp_path / "chunks"))
+        data = b"y" * 1024
+        h = chunkstore.chunk_digest(data)
+        pool.write(h, data)
+        import zlib
+        ref = ChunkRef(hash=h, nbytes=1024, raw_len=1024,
+                       crc32=zlib.crc32(data), comp="raw")
+        raw = bytearray(open(pool.path(h), "rb").read())
+        raw[10] ^= 0xFF
+        open(pool.path(h), "wb").write(bytes(raw))
+        with pytest.raises(IOError):
+            pool.read(ref)
+
+
+class TestDeltaDedup:
+    def test_low_churn_writes_under_quarter_of_full(self, tmp_path):
+        """Acceptance: mostly-frozen state -> delta save <= 25% of full bytes."""
+        store = CheckpointStore(str(tmp_path), retention=10, chunk_size=64 * 1024)
+        i1 = store.save(1, big_state(1, churn_frac=0.05))
+        assert i1.new_bytes == i1.nbytes          # cold pool: everything dirty
+        i2 = store.save(2, big_state(2, churn_frac=0.05))
+        assert i2.nbytes > 1 << 20                # full snapshot is ~2 MB
+        assert i2.new_bytes <= 0.25 * i2.nbytes, (i2.new_bytes, i2.nbytes)
+
+    def test_dedup_survives_process_restart(self, tmp_path):
+        """A fresh store (empty DeltaIndex memo) still dedups against the
+        pool by content address — the memo is an optimization, not state."""
+        CheckpointStore(str(tmp_path), retention=10).save(1, big_state(1))
+        fresh = CheckpointStore(str(tmp_path), retention=10)
+        info = fresh.save(2, big_state(2))        # only step/b leaves changed
+        assert info.new_bytes < 0.01 * info.nbytes
+
+    def test_restore_old_step_after_later_deltas(self, tmp_path):
+        store = CheckpointStore(str(tmp_path), retention=10)
+        for step in range(1, 5):
+            store.save(step, big_state(step, churn_frac=0.1))
+        got, man = store.restore(template(), step=2)
+        assert man.step == 2 and man.format_version == 2
+        want = big_state(2, churn_frac=0.1)
+        np.testing.assert_array_equal(got["params"]["big"], want["params"]["big"])
+        np.testing.assert_array_equal(got["params"]["b"], want["params"]["b"])
+
+    def test_multi_writer_same_state_shares_chunks(self, tmp_path):
+        """Two stores on one volume (fleet members) converge on one pool copy."""
+        a = CheckpointStore(str(tmp_path), retention=10)
+        b = CheckpointStore(str(tmp_path), retention=10)
+        a.save(1, big_state(1))
+        info = b.save(2, big_state(1, rng_seed=0))   # same tensors, new step
+        assert info.new_bytes < 0.01 * info.nbytes
+
+
+class TestCorruptionSelfHeal:
+    def test_corrupt_chunk_not_reused_and_rewritten(self, tmp_path):
+        """A damaged pool entry must not poison future saves: a failed crc
+        removes the file, and the next save of the same content rewrites it
+        instead of dedup-reusing the damage."""
+        store = CheckpointStore(str(tmp_path), retention=10,
+                                validate_on_restore=True)
+        store.save(1, big_state(1))
+        man1 = mf.read_manifest(os.path.join(str(tmp_path), mf.step_dirname(1)))
+        victim = sorted(man1.chunk_hashes())[0]
+        path = store.pool.path(victim)
+        raw = bytearray(open(path, "rb").read())
+        raw[0] ^= 0xFF
+        open(path, "wb").write(bytes(raw))
+        with pytest.raises(FileNotFoundError):
+            store.restore(template())             # step 1 invalid; heals pool
+        assert not os.path.exists(path)           # corrupt entry removed
+        # fresh store (cold memo) re-saves the same content: chunk rewritten
+        fresh = CheckpointStore(str(tmp_path), retention=10,
+                                validate_on_restore=True)
+        fresh.save(2, big_state(1))
+        got, man = fresh.restore(template())
+        assert man.step == 2 and os.path.exists(path)
+
+    def test_truncated_chunk_not_dedup_reused(self, tmp_path):
+        """Size-mismatched pool entries are overwritten, not touch-reused."""
+        store = CheckpointStore(str(tmp_path), retention=10)
+        store.save(1, big_state(1))
+        man1 = mf.read_manifest(os.path.join(str(tmp_path), mf.step_dirname(1)))
+        victim = sorted(man1.chunk_hashes())[0]
+        path = store.pool.path(victim)
+        open(path, "wb").write(b"short")          # truncate in place
+        fresh = CheckpointStore(str(tmp_path), retention=10,
+                                validate_on_restore=True)
+        fresh.save(2, big_state(1))
+        got, man = fresh.restore(template())      # validates every chunk
+        assert man.step == 2
+
+
+class TestPoolGC:
+    def test_gc_never_sweeps_chunks_referenced_by_live_manifest(self, tmp_path):
+        store = CheckpointStore(str(tmp_path), retention=2, chunk_size=64 * 1024)
+        for step in range(1, 6):
+            store.save(step, big_state(step, churn_frac=0.1))
+        assert store.committed_steps() == [4, 5]
+        # age gate disabled: everything unreferenced is sweepable *now*
+        store.gc(stale_chunk_age_s=0.0)
+        for step in (4, 5):
+            got, man = store.restore(template(), step=step)
+            assert man.step == step               # all referenced chunks alive
+        live = store.live_chunk_hashes()
+        on_disk = {h for h, _ in store.pool.all_chunks()}
+        assert on_disk == live                    # and nothing else survived
+
+    def test_gc_respects_age_gate_for_unreferenced(self, tmp_path):
+        store = CheckpointStore(str(tmp_path), retention=1)
+        store.save(1, big_state(1))
+        store.save(2, big_state(2, churn_frac=0.2))  # step 1 gc'd by retention
+        n_before = sum(1 for _ in store.pool.all_chunks())
+        store.gc(stale_chunk_age_s=3600.0)           # fresh orphans: protected
+        assert sum(1 for _ in store.pool.all_chunks()) == n_before
+        store.gc(stale_chunk_age_s=0.0)
+        assert {h for h, _ in store.pool.all_chunks()} == store.live_chunk_hashes()
+
+
+class TestBackCompat:
+    def test_v1_checkpoint_restores_through_new_reader(self, tmp_path):
+        """A checkpoint written by the pre-delta (full/v1) writer restores
+        through the default (delta-mode) store."""
+        v1 = CheckpointStore(str(tmp_path), mode="full")
+        s = big_state(7)
+        info = v1.save(7, s)
+        assert info.new_bytes == info.nbytes
+        man = mf.read_manifest(os.path.join(str(tmp_path), mf.step_dirname(7)))
+        assert man.format_version == 1
+        assert all("file" in rec and "chunks" not in rec for rec in man.tensors)
+        got, man2 = CheckpointStore(str(tmp_path)).restore(template())
+        assert man2.step == 7
+        np.testing.assert_array_equal(got["params"]["big"], s["params"]["big"])
+
+    def test_mixed_history_falls_back_across_formats(self, tmp_path):
+        """Latest-valid search walks delta and full checkpoints uniformly."""
+        CheckpointStore(str(tmp_path), mode="full", retention=10).save(1, big_state(1))
+        store = CheckpointStore(str(tmp_path), retention=10,
+                                validate_on_restore=True)
+        store.save(2, big_state(2))
+        man2 = mf.read_manifest(os.path.join(str(tmp_path), mf.step_dirname(2)))
+        for h in sorted(man2.chunk_hashes()):
+            os.remove(store.pool.path(h))        # destroy every v2 chunk
+        got, man = store.restore(template())
+        assert man.step == 1 and man.format_version == 1
+
+
+class TestUrgentDelta:
+    def test_urgent_save_writes_only_dirty_chunks(self, tmp_path):
+        """Termination checkpoint after a periodic save: the notice-window
+        write is the churn since the snapshot, not the full state."""
+        store = CheckpointStore(str(tmp_path), retention=10, chunk_size=64 * 1024)
+        ac = AsyncCheckpointer(store)
+        ac.save_async(10, big_state(10, churn_frac=0.05))
+        ac.wait_until_finished()
+        info = ac.save_urgent(11, big_state(11, churn_frac=0.05), timeout_s=60.0)
+        ac.close()
+        assert info.kind == "termination"
+        assert info.new_bytes <= 0.25 * info.nbytes, (info.new_bytes, info.nbytes)
+        got, man = store.restore(template())
+        assert man.step == 11 and man.kind == "termination"
+
+    def test_urgent_info_surfaces_physical_bytes(self, tmp_path):
+        store = CheckpointStore(str(tmp_path), retention=10)
+        ac = AsyncCheckpointer(store)
+        info1 = ac.save_urgent(1, big_state(1), timeout_s=60.0)
+        info2 = ac.save_urgent(2, big_state(1), timeout_s=60.0)  # zero churn
+        ac.close()
+        assert info1.new_bytes == info1.nbytes
+        assert info2.new_bytes < 0.01 * info2.nbytes
+
+
+class TestParallelCodecs:
+    def test_many_tensors_roundtrip_bitexact(self, tmp_path):
+        """Worker-pool encode across dozens of tensors stays bit-exact."""
+        rng = np.random.default_rng(3)
+        state = {f"t{i}": rng.standard_normal((257, 33)).astype(np.float32)
+                 for i in range(24)}
+        state["ints"] = np.arange(5000, dtype=np.int32)   # zlib-compressed leaf
+        store = CheckpointStore(str(tmp_path), chunk_size=8 * 1024)
+        store.save(1, state)
+        tpl = {k: np.zeros_like(v) for k, v in state.items()}
+        got, _ = store.restore(tpl)
+        for k in state:
+            np.testing.assert_array_equal(got[k], state[k])

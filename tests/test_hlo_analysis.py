@@ -80,8 +80,8 @@ def test_collectives_counted_with_trips():
         import jax, jax.numpy as jnp
         from jax.sharding import NamedSharding, PartitionSpec as P
         from repro.launch.hlo_analysis import analyze
-        mesh = jax.make_mesh((4,), ("model",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((4,), ("model",))
         sh_w = NamedSharding(mesh, P(None, None, "model"))
         sh_x = NamedSharding(mesh, P(None))
         L, D = 4, 64

@@ -17,10 +17,10 @@ SCRIPT = textwrap.dedent("""
     import jax, jax.numpy as jnp
     from jax.sharding import NamedSharding, PartitionSpec as P
     from repro.checkpoint import CheckpointStore
+    from repro.launch.mesh import make_mesh
 
     td = sys.argv[1]
-    mesh = jax.make_mesh((4, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((4, 2), ("data", "model"))
     sh = NamedSharding(mesh, P("data", "model"))
     w = jax.device_put(jnp.arange(256, dtype=jnp.bfloat16).reshape(16, 16), sh)
     state = {"params": {"w": w, "b": jnp.ones((16,), jnp.float32)},
@@ -31,8 +31,7 @@ SCRIPT = textwrap.dedent("""
     assert info.nbytes > 0
 
     # 1. restore onto a DIFFERENT mesh shape (2x4) with different specs
-    mesh2 = jax.make_mesh((2, 4), ("data", "model"),
-                          axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh2 = make_mesh((2, 4), ("data", "model"))
     sh2 = NamedSharding(mesh2, P(None, "model"))
     tpl = {"params": {"w": jax.ShapeDtypeStruct((16, 16), jnp.bfloat16, sharding=sh2),
                       "b": jnp.zeros((16,), jnp.float32)},
@@ -43,9 +42,7 @@ SCRIPT = textwrap.dedent("""
     assert got["step"] == 11
 
     # 2. restore onto FEWER devices (half the 'pod' lost)
-    mesh3 = jax.make_mesh((2, 2), ("data", "model"),
-                          axis_types=(jax.sharding.AxisType.Auto,) * 2,
-                          devices=jax.devices()[:4])
+    mesh3 = make_mesh((2, 2), ("data", "model"), devices=jax.devices()[:4])
     sh3 = NamedSharding(mesh3, P("data", "model"))
     tpl3 = dict(tpl)
     tpl3 = {"params": {"w": jax.ShapeDtypeStruct((16, 16), jnp.bfloat16, sharding=sh3),
