@@ -39,22 +39,29 @@ def make_state(step: int, churn: float) -> dict:
     return base
 
 
-def run_store(store: CheckpointStore, churn: float) -> tuple[float, float]:
-    """Returns (mean bytes written, mean latency seconds) over warm steps."""
-    t_bytes, t_lat = [], []
+def run_store(store: CheckpointStore, churn: float) -> tuple[float, float, float]:
+    """Returns (mean bytes written, mean save s, mean restore s) over warm
+    steps — restore exercises the mmap/parallel-decode read path."""
+    t_bytes, t_lat, t_res = [], [], []
+    template = {k: np.zeros_like(v) if isinstance(v, np.ndarray) else 0
+                for k, v in make_state(0, churn).items()}
     for step in range(STEPS):
         state = make_state(step, churn)
         t0 = time.perf_counter()
         info = store.save(step, state)
         lat = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        store.restore(template)
+        res = time.perf_counter() - t0
         if step > 0:            # step 0 is the cold full write for both modes
             t_bytes.append(info.new_bytes)
             t_lat.append(lat)
-    return float(np.mean(t_bytes)), float(np.mean(t_lat))
+            t_res.append(res)
+    return float(np.mean(t_bytes)), float(np.mean(t_lat)), float(np.mean(t_res))
 
 
 def main() -> None:
-    print("churn,mode,bytes_written,save_ms,bytes_vs_full")
+    print("churn,mode,bytes_written,save_ms,restore_ms,bytes_vs_full")
     for churn in CHURN_RATES:
         results = {}
         for mode in ("full", "delta"):
@@ -67,9 +74,9 @@ def main() -> None:
                 shutil.rmtree(td, ignore_errors=True)
         full_bytes = results["full"][0]
         for mode in ("full", "delta"):
-            b, lat = results[mode]
+            b, lat, res = results[mode]
             rel = b / full_bytes if full_bytes else float("nan")
-            print(f"{churn:.2f},{mode},{b:.0f},{lat * 1e3:.1f},{rel:.3f}")
+            print(f"{churn:.2f},{mode},{b:.0f},{lat * 1e3:.1f},{res * 1e3:.1f},{rel:.3f}")
 
 
 if __name__ == "__main__":

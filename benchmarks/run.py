@@ -24,8 +24,22 @@ def section(name):
     print(f"\n===== {name} =====", flush=True)
 
 
+BENCH_JSON = "BENCH_ckpt.json"
+
+
 def micro():
-    """Checkpoint-path microbenchmarks (real wall time, CPU)."""
+    """Checkpoint-path microbenchmarks (real wall time, CPU).
+
+    The 8x512x512 float32 fixture (8.4 MB) runs each hot-path leg 7x and
+    records the **best** per-rep GB/s into BENCH_ckpt.json at the repo root,
+    next to a frozen ``baseline`` section (the pre-zero-copy hot path,
+    measured with this same best-of-7 harness) — the bench trajectory the
+    ROADMAP asks for. Best-of-N, not mean: the CI/container filesystem (9p)
+    has multi-hundred-ms fsync stalls from noisy neighbours, and the bench
+    measures the code, not the weather. Numbers print as CSV either way.
+    """
+    import json
+    import os
     import tempfile
 
     import numpy as np
@@ -36,33 +50,57 @@ def micro():
         (512, 512)).astype(np.float32) for i in range(8)},
         "step": 7}
     nbytes = sum(a.nbytes for a in state["params"].values())
-    print("name,us_per_call,derived")
-    t0 = time.perf_counter()
-    reps = 5
-    for _ in range(reps):
-        snap = extract_snapshot(state, step=7)
-    dt = (time.perf_counter() - t0) / reps
-    print(f"extract_snapshot,{dt*1e6:.0f},{nbytes/dt/1e9:.2f}_GBps")
+    results: dict[str, float] = {}
+    print("name,best_us_per_call,derived")
+
+    def report(name: str, dts: list) -> None:
+        dt = min(dts)
+        gbps = nbytes / dt / 1e9
+        results[f"{name}_GBps"] = round(gbps, 3)
+        print(f"{name},{dt*1e6:.0f},{gbps:.2f}_GBps")
+
+    def timed(fn, *args) -> float:
+        t0 = time.perf_counter()
+        fn(*args)
+        return time.perf_counter() - t0
+
+    reps = 7
+    report("extract_snapshot",
+           [timed(lambda: extract_snapshot(state, step=7))
+            for _ in range(reps)])
     with tempfile.TemporaryDirectory() as td:
         store = CheckpointStore(td, compress=False)
-        t0 = time.perf_counter()
-        for i in range(reps):
-            store.save(i, state)
-        dt = (time.perf_counter() - t0) / reps
-        print(f"store_save_raw,{dt*1e6:.0f},{nbytes/dt/1e9:.2f}_GBps")
+        report("store_save_raw",
+               [timed(store.save, i, state) for i in range(reps)])
         store_z = CheckpointStore(td + "_z", compress=True)
-        t0 = time.perf_counter()
-        for i in range(reps):
-            store_z.save(i, state)
-        dt = (time.perf_counter() - t0) / reps
-        print(f"store_save_zstd,{dt*1e6:.0f},{nbytes/dt/1e9:.2f}_GBps")
+        report("store_save_compressed",
+               [timed(store_z.save, i, state) for i in range(reps)])
         tpl = {"params": {k: np.zeros_like(v) for k, v in state["params"].items()},
                "step": 0}
-        t0 = time.perf_counter()
-        for _ in range(reps):
-            store.restore(tpl)
-        dt = (time.perf_counter() - t0) / reps
-        print(f"store_restore,{dt*1e6:.0f},{nbytes/dt/1e9:.2f}_GBps")
+        report("store_restore",
+               [timed(store.restore, tpl) for _ in range(reps)])
+
+    path = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..",
+                        BENCH_JSON)
+    doc = {}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                doc = json.load(f)
+        except (OSError, ValueError):
+            doc = {}
+    doc.setdefault("fixture", "8x512x512 float32 (8.39 MB), CPU")
+    doc.setdefault("method", "best of 7 reps per leg")
+    # a missing baseline is seeded from this run — and says so, so a wiped
+    # file can never masquerade as a meaningful before/after comparison
+    doc.setdefault("baseline", {
+        "recorded": "seeded from the first micro run on this machine "
+                    "(no prior baseline found)", **results})
+    doc["current"] = dict(results)
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2)
+        f.write("\n")
+    print(f"(recorded to {os.path.relpath(path)})")
 
 
 def main() -> None:

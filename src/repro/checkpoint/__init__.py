@@ -4,11 +4,12 @@ See DESIGN.md §3."""
 
 from .async_ckpt import AsyncCheckpointer
 from .chunkstore import ChunkPool, ChunkRef, DeltaIndex
-from .sharded import CheckpointReader, Snapshot, extract_snapshot, restore_to_template
+from .sharded import (CheckpointReader, Snapshot, extract_snapshot, prestage,
+                      restore_to_template)
 from .store import CheckpointInfo, CheckpointStore
 
 __all__ = [
     "AsyncCheckpointer", "CheckpointInfo", "CheckpointReader", "CheckpointStore",
     "ChunkPool", "ChunkRef", "DeltaIndex",
-    "Snapshot", "extract_snapshot", "restore_to_template",
+    "Snapshot", "extract_snapshot", "prestage", "restore_to_template",
 ]

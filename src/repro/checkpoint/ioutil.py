@@ -1,0 +1,74 @@
+"""Low-level IO helpers shared by the checkpoint hot path.
+
+Three concerns live here because every layer of the save/restore path needs
+them and none owns them:
+
+* **Buffer views** — the save path's one-copy invariant (a tensor is
+  materialized on the host at most once; hashing, chunking and compression all
+  run on ``memoryview`` windows over that buffer) needs a way to see any
+  numpy array, including ml_dtypes extended types that reject the buffer
+  protocol's format negotiation, as flat bytes without copying.
+* **mmap with fallback** — the restore path maps each container/pool file
+  once and slices it, but must degrade to plain reads on filesystems or
+  platforms where mmap fails (some network mounts reject ``MAP_SHARED``).
+* **Directory durability** — an ``os.replace`` is atomic but not durable
+  until the parent directory's entry is fsynced; a crash right after rename
+  may otherwise roll the name back and lose a "committed" checkpoint.
+"""
+
+from __future__ import annotations
+
+import mmap
+import os
+
+import numpy as np
+
+
+def array_bytes_view(arr: np.ndarray) -> memoryview:
+    """Flat ``memoryview`` (format 'B') over an array's buffer, zero-copy.
+
+    The view goes through a uint8 reinterpretation so extended dtypes
+    (bfloat16, float8) export cleanly. Requires a C-contiguous array; callers
+    on the save path guarantee that (``quantize`` returns contiguous).
+    """
+    return memoryview(arr.reshape(-1).view(np.uint8).data)
+
+
+def mmap_view(path: str) -> memoryview:
+    """Read-only view of a whole file: mmap-backed when possible, else a
+    plain read. The returned memoryview keeps its backing object (mmap or
+    bytes) alive; pass it to ``release_view`` for deterministic teardown."""
+    with open(path, "rb") as f:
+        try:
+            return memoryview(mmap.mmap(f.fileno(), 0, access=mmap.ACCESS_READ))
+        except (ValueError, OSError):     # empty file / fs without mmap
+            return memoryview(f.read())
+
+
+def release_view(view: memoryview) -> None:
+    """Release a view from ``mmap_view`` and close its mapping now rather
+    than at GC time (an open mapping pins the file on some filesystems)."""
+    backing = view.obj
+    view.release()
+    close = getattr(backing, "close", None)   # mmap has close(); bytes doesn't
+    if close is not None:
+        close()
+
+
+def fsync_dir(path: str) -> None:
+    """fsync a directory so renames/creates inside it survive a crash.
+
+    Best-effort: directories aren't opendable for fsync on every platform
+    (or may race with a concurrent sweep), and losing the *durability* of a
+    rename is strictly better than failing the save that performed it.
+    """
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:
+        return
+    try:
+        os.fsync(fd)
+    except OSError:
+        pass
+    finally:
+        os.close(fd)

@@ -25,6 +25,8 @@ import time
 from dataclasses import dataclass, field
 from typing import Any
 
+from .ioutil import fsync_dir
+
 MANIFEST_NAME = "manifest.json"
 COMMIT_MARKER = "COMMITTED"
 STEP_PREFIX = "step_"
@@ -106,6 +108,12 @@ def write_manifest(dirpath: str, manifest: Manifest) -> None:
         f.flush()
         os.fsync(f.fileno())
     os.replace(tmp, path)
+    # no directory fsync here: the step dir keeps its inode through the
+    # stage->final rename, so the single fsync_dir in mark_committed
+    # persists this entry and the COMMITTED entry together — and COMMITTED
+    # durable without the manifest entry is impossible (same flush). Every
+    # fsync on the commit path is latency inside the eviction-notice window,
+    # so each one has to pay for itself.
 
 
 def read_manifest(dirpath: str) -> Manifest:
@@ -119,6 +127,10 @@ def mark_committed(dirpath: str) -> None:
         f.write(f"{time.time()}\n")
         f.flush()
         os.fsync(f.fileno())
+    # one dir fsync persists the COMMITTED entry *and* the manifest entry
+    # created before the rename (same dir inode) — a crash after this point
+    # cannot lose a checkpoint the writer reported as committed
+    fsync_dir(dirpath)
 
 
 def is_committed(dirpath: str) -> bool:

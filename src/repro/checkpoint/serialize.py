@@ -18,6 +18,15 @@ on float tensors zlib's ~20 MB/s for a ~7% ratio would dominate checkpoint
 time, so they stay raw), and reading a zstd-coded file raises a clear error
 instead of an ImportError at import.
 
+The encode path holds a **one-copy invariant**: a tensor's payload is
+materialized on the host at most once (the staged array itself for raw
+codecs, the int8 array for quantized ones). ``quantize`` returns a contiguous
+*array*, not bytes, and everything downstream — chunking, hashing, crc,
+compression, file writes — operates on ``memoryview`` windows over that
+buffer. Decode is symmetric: ``ShardFileReader`` maps its container once and
+decodes tensors from mmap slices straight into caller-preallocated
+destination buffers (``read_into``).
+
 bfloat16 (and other ml_dtypes extended types) round-trip via dtype-name lookup
 rather than numpy's descr machinery, which cannot serialize custom dtypes.
 """
@@ -26,12 +35,15 @@ from __future__ import annotations
 
 import io
 import json
+import os
 import struct
 import zlib
 from dataclasses import dataclass, field
 from typing import Any, Callable, Iterable, Sequence
 
 import numpy as np
+
+from .ioutil import array_bytes_view, mmap_view, release_view
 
 try:  # optional: zstd beats zlib on ratio+speed, but zlib always exists
     import zstandard
@@ -143,11 +155,21 @@ def unflatten_state(treedef, named: dict[str, Any], order: Sequence[str]):
 
 
 def to_host(leaf) -> np.ndarray:
-    """Device/py leaf -> numpy array (blocking device->host copy for jax.Array)."""
+    """Device/py leaf -> numpy array: the snapshot *freeze*.
+
+    jax.Array leaves stay zero-copy views (np.asarray of an immutable
+    buffer — on CPU backends not even a transfer). Caller-owned numpy leaves
+    are **copied**: the encode path hashes and writes from memoryview windows
+    over this buffer, so if it aliased live state a concurrent in-place
+    mutation between digest and write would commit a chunk whose bytes match
+    neither its content address nor its crc — an unrestorable checkpoint
+    that was reported committed. The copy is the freeze the snapshot
+    contract promises, and it is the save path's one materialization.
+    """
     if isinstance(leaf, jax.Array):
         return np.asarray(leaf)
     if isinstance(leaf, np.ndarray):
-        return leaf
+        return leaf.copy()
     return np.asarray(leaf)
 
 
@@ -179,17 +201,40 @@ def split_codec(codec: str) -> tuple[str, str]:
     return quant, comp
 
 
-def quantize(arr: np.ndarray, quant: str) -> tuple[bytes, float | None]:
-    """Tensor -> contiguous raw payload (+ absmax scale for int8)."""
+def quantize(arr: np.ndarray, quant: str) -> tuple[np.ndarray, float | None]:
+    """Tensor -> contiguous payload *array* (+ absmax scale for int8).
+
+    Returns an array, not bytes: for the raw codec this is the input itself
+    when already contiguous (zero-copy), so downstream hashing/compression
+    can run on memoryview windows without a ``.tobytes()`` materialization.
+    """
     if quant == "int8":
-        absmax = float(np.max(np.abs(arr.astype(np.float32)))) if arr.size else 0.0
-        scale = absmax / 127.0 if absmax > 0 else 1.0
-        q = np.clip(np.round(arr.astype(np.float32) / scale), -127, 127).astype(np.int8)
-        return q.tobytes(), scale
-    return np.ascontiguousarray(arr).tobytes(), None
+        absmax = np.float32(np.max(np.abs(arr.astype(np.float32)))) if arr.size \
+            else np.float32(0.0)
+        scale, inv = int8_scale_inv(absmax)
+        # multiply-only elementwise step, float32 scalar arithmetic: this is
+        # what keeps a host quantize bit-identical to the on-device kernel
+        # (kernels/quantize) even under XLA's fast-math, which rewrites
+        # division into reciprocal-multiply — identical payload bytes are what
+        # let urgent (device-quantized) and periodic (host-quantized) saves of
+        # the same state dedup to the same pool chunks
+        q = np.clip(np.round(arr.astype(np.float32) * inv), -127, 127).astype(np.int8)
+        return q, float(scale)
+    return np.ascontiguousarray(arr), None
 
 
-def compress_bytes(buf: bytes, comp: str) -> bytes:
+def int8_scale_inv(absmax) -> tuple[np.float32, np.float32]:
+    """absmax -> (scale, 1/scale), both float32, computed with numpy scalar
+    ops. Every quantize implementation (host, jnp oracle, Pallas kernel)
+    funnels its reduce result through this one function so the scalar
+    rounding sequence — and therefore the stored bytes — cannot diverge."""
+    absmax = np.float32(absmax)
+    scale = absmax / np.float32(127.0) if absmax > 0 else np.float32(1.0)
+    return scale, np.float32(1.0) / scale
+
+
+def compress_bytes(buf, comp: str) -> bytes:
+    """Compress a bytes-like (bytes or memoryview window) payload."""
     if comp == "zstd":
         return zstandard.ZstdCompressor(level=3).compress(buf)
     if comp == "zlib":
@@ -197,7 +242,7 @@ def compress_bytes(buf: bytes, comp: str) -> bytes:
     return buf
 
 
-def decompress_bytes(buf: bytes, comp: str) -> bytes:
+def decompress_bytes(buf, comp: str) -> bytes:
     if comp == "zstd":
         if not HAVE_ZSTD:
             raise IOError(
@@ -209,26 +254,48 @@ def decompress_bytes(buf: bytes, comp: str) -> bytes:
     return buf
 
 
-def payload_to_array(raw: bytes, *, dtype_name: str, shape, quant: str,
-                     scale: float | None) -> np.ndarray:
-    """Decoded (decompressed) raw payload -> tensor."""
-    shape = tuple(shape)
+def stored_dtype(dtype_name: str, quant: str) -> np.dtype:
+    """Dtype of the raw (pre-compression) payload on disk."""
+    return np.dtype(np.int8) if quant == "int8" else name_to_dtype(dtype_name)
+
+
+def alloc_payload(dtype_name: str, shape, quant: str) -> np.ndarray:
+    """Preallocated destination for a tensor's raw payload — decode fills
+    this in place (one mmap-slice copy per chunk, no concatenation)."""
+    return np.empty(tuple(shape), dtype=stored_dtype(dtype_name, quant))
+
+
+def finish_payload(dst: np.ndarray, *, dtype_name: str, quant: str,
+                   scale: float | None) -> np.ndarray:
+    """Filled payload array -> logical tensor (dequantize if needed)."""
     if quant == "int8":
-        q = np.frombuffer(raw, dtype=np.int8).reshape(shape)
-        return (q.astype(np.float32) * scale).astype(name_to_dtype(dtype_name))
-    return np.frombuffer(raw, dtype=name_to_dtype(dtype_name)).reshape(shape).copy()
+        return (dst.astype(np.float32) * scale).astype(name_to_dtype(dtype_name))
+    return dst
 
 
-def _encode(arr: np.ndarray, codec: str) -> tuple[bytes, float | None]:
+def payload_to_array(raw, *, dtype_name: str, shape, quant: str,
+                     scale: float | None) -> np.ndarray:
+    """Decoded (decompressed) raw payload bytes -> tensor (copies)."""
+    shape = tuple(shape)
+    dst = np.frombuffer(raw, dtype=stored_dtype(dtype_name, quant)).reshape(shape)
+    if quant != "int8":
+        dst = dst.copy()        # frombuffer views are read-only
+    return finish_payload(dst, dtype_name=dtype_name, quant=quant, scale=scale)
+
+
+def _encode(arr: np.ndarray, codec: str):
     quant, comp = split_codec(codec)
     raw, scale = quantize(arr, quant)
-    return compress_bytes(raw, comp), scale
+    view = array_bytes_view(raw)
+    if comp:
+        return compress_bytes(view, comp), scale
+    return view, scale          # zero-copy: raw codec payload is the array
 
 
-def _decode(buf: bytes, rec: TensorRecord) -> np.ndarray:
+def _decode(buf, rec: TensorRecord) -> np.ndarray:
     quant, comp = split_codec(rec.codec)
     try:
-        raw = decompress_bytes(buf, comp)
+        raw = decompress_bytes(buf, comp) if comp else buf
     except IOError as e:
         raise IOError(f"tensor {rec.name!r}: {e}") from None
     return payload_to_array(raw, dtype_name=rec.dtype, shape=rec.shape,
@@ -242,7 +309,7 @@ def _decode(buf: bytes, rec: TensorRecord) -> np.ndarray:
 @dataclass
 class PendingTensor:
     record: TensorRecord
-    payload: bytes
+    payload: Any               # bytes or memoryview over the staged array
 
 
 def encode_tensor(
@@ -252,14 +319,31 @@ def encode_tensor(
     global_shape: tuple[int, ...] | None = None,
     index: tuple[tuple[int, int], ...] | None = None,
     codec: str = "raw",
+    prequant_scale: float | None = None,
+    logical_dtype: str | None = None,
 ) -> PendingTensor:
+    """Encode one tensor piece.
+
+    ``prequant_scale`` marks ``arr`` as an already-quantized int8 payload
+    (produced on-device before the host copy): the quantize half of ``codec``
+    is skipped, ``logical_dtype`` records the original dtype, and the on-disk
+    bytes are identical to a host-side quantize of the same values.
+    """
     arr = np.asarray(arr)
     codec = resolve_codec(codec)
     gshape = tuple(global_shape if global_shape is not None else arr.shape)
     idx = tuple(index if index is not None else tuple((0, s) for s in arr.shape))
-    payload, scale = _encode(arr, codec)
+    if prequant_scale is not None:
+        _quant, comp = split_codec(codec)
+        view = array_bytes_view(np.ascontiguousarray(arr))
+        payload = compress_bytes(view, comp) if comp else view
+        scale = prequant_scale
+        dtype_name = logical_dtype or dtype_to_name(arr.dtype)
+    else:
+        payload, scale = _encode(arr, codec)
+        dtype_name = dtype_to_name(arr.dtype)
     rec = TensorRecord(
-        name=name, dtype=dtype_to_name(arr.dtype), shape=tuple(arr.shape),
+        name=name, dtype=dtype_name, shape=tuple(arr.shape),
         global_shape=gshape, index=idx, nbytes=len(payload),
         crc32=zlib.crc32(payload), codec=codec, scale=scale,
     )
@@ -283,40 +367,85 @@ def write_shard_file(path, tensors: Iterable[PendingTensor]) -> list[TensorRecor
         for t in tensors:
             f.write(t.payload)
         f.flush()
-        import os
         os.fsync(f.fileno())
     return records
 
 
 class ShardFileReader:
-    """Random access into a shard container; validates crc per read."""
+    """Random access into a shard container; validates crc per read.
+
+    The container is mapped once (``mmap``) and every tensor read slices the
+    mapping — no per-tensor ``open``/``read`` syscalls, and raw-codec tensors
+    copy straight from the page cache into the destination buffer. Falls back
+    to one buffered read of the whole file where mmap is unavailable.
+    """
 
     def __init__(self, path):
         self.path = path
-        with open(path, "rb") as f:
-            magic = f.read(len(MAGIC))
-            if magic != MAGIC:
-                raise ValueError(f"{path}: bad magic {magic!r}")
-            (hlen,) = _U32.unpack(f.read(4))
-            header = json.loads(f.read(hlen).decode())
-            self._payload_start = len(MAGIC) + 4 + hlen
+        self._buf = mmap_view(str(path))
+        if bytes(self._buf[:len(MAGIC)]) != MAGIC:
+            magic = bytes(self._buf[:len(MAGIC)])
+            release_view(self._buf)
+            raise ValueError(f"{path}: bad magic {magic!r}")
+        (hlen,) = _U32.unpack(self._buf[len(MAGIC):len(MAGIC) + 4])
+        self._payload_start = len(MAGIC) + 4 + hlen
+        header = json.loads(bytes(self._buf[len(MAGIC) + 4:self._payload_start]))
         self.records = {r["name"]: TensorRecord.from_json(r) for r in header["tensors"]}
+
+    def close(self) -> None:
+        if self._buf is not None:
+            release_view(self._buf)
+            self._buf = None
 
     def names(self) -> list[str]:
         return list(self.records)
 
-    def read(self, name: str) -> np.ndarray:
-        rec = self.records[name]
-        with open(self.path, "rb") as f:
-            f.seek(self._payload_start + rec.offset)
-            buf = f.read(rec.nbytes)
+    def _payload_view(self, rec: TensorRecord) -> memoryview:
+        start = self._payload_start + rec.offset
+        buf = self._buf[start:start + rec.nbytes]
         if zlib.crc32(buf) != rec.crc32:
-            raise IOError(f"{self.path}:{name}: crc mismatch (corrupt shard)")
-        return _decode(buf, rec)
+            raise IOError(f"{self.path}:{rec.name}: crc mismatch (corrupt shard)")
+        return buf
+
+    def read(self, name: str) -> np.ndarray:
+        return _decode(self._payload_view(self.records[name]),
+                       self.records[name])
+
+    def read_into(self, name: str, dst: np.ndarray) -> bool:
+        """Decode ``name`` directly into preallocated ``dst`` when its dtype
+        and shape match the stored payload; returns False (caller falls back
+        to ``read``) otherwise. One copy: mmap slice -> dst."""
+        rec = self.records[name]
+        quant, comp = split_codec(rec.codec)
+        if (quant or tuple(dst.shape) != tuple(rec.shape)
+                or dst.dtype != name_to_dtype(rec.dtype)
+                or not dst.flags.c_contiguous):
+            return False
+        buf = self._payload_view(rec)
+        out = array_bytes_view(dst)
+        if comp:
+            out[:] = decompress_bytes(buf, comp)
+        else:
+            out[:] = buf
+        return True
 
     def validate(self) -> None:
         for name in self.records:
             self.read(name)
+
+
+def is_float_dtype(dtype) -> bool:
+    """True for float dtypes *including* ml_dtypes extended types, which
+    numpy's issubdtype does not classify as inexact."""
+    dt = np.dtype(dtype)
+    return (np.issubdtype(dt, np.floating)
+            or any(dt == np.dtype(t) for t in _EXTENDED_DTYPES.values()))
+
+
+def is_moment_name(name: str) -> bool:
+    """True for optimizer-moment leaves (``opt_state/.../mu|nu``)."""
+    wrapped = f"/{name}/"
+    return "/mu/" in wrapped or "/nu/" in wrapped
 
 
 def default_codec_for(name: str, arr: np.ndarray, *, compress: bool,
@@ -327,18 +456,16 @@ def default_codec_for(name: str, arr: np.ndarray, *, compress: bool,
     beyond-paper optimization that shrinks termination checkpoints so they fit
     inside the eviction-notice window. Params and scalars stay exact.
     """
-    is_moment = ("/mu/" in f"/{name}/" or name.endswith("/mu")
-                 or "/nu/" in f"/{name}/" or name.endswith("/nu"))
-    floaty = np.issubdtype(np.asarray(arr).dtype, np.floating) or \
-        np.asarray(arr).dtype == np.dtype(ml_dtypes.bfloat16)
-    if quantize_moments and is_moment and floaty and np.asarray(arr).ndim >= 1:
+    arr = np.asarray(arr)
+    if (quantize_moments and is_moment_name(name) and is_float_dtype(arr.dtype)
+            and arr.ndim >= 1):
         return resolve_codec("int8+zstd") if compress else "int8"
-    if compress and np.asarray(arr).nbytes >= 1024:
+    if compress and arr.nbytes >= 1024:
         if HAVE_ZSTD:
             return "zstd"
         # zlib runs ~20 MB/s on float payloads for a ~7% ratio — it would
         # dominate checkpoint time for no real size win, so large float
         # tensors stay raw; integer/bool payloads still compress well
-        if np.asarray(arr).dtype.kind in "iub":
+        if arr.dtype.kind in "iub":
             return "zlib"
     return "raw"

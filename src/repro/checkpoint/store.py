@@ -35,6 +35,7 @@ from typing import Any, Callable
 from . import chunkstore
 from . import manifest as mf
 from . import sharded
+from .ioutil import fsync_dir
 
 
 @dataclass
@@ -156,8 +157,21 @@ class CheckpointStore:
                     if os.path.exists(final):  # uncommitted leftover: replace
                         shutil.rmtree(final)
                     os.replace(stage, final)
+                    # durable, not just atomic: sync the root so a crash
+                    # right after the rename can't roll the step dir back.
+                    # The root fsync overlaps the marker write — they are
+                    # independent (rename rollback removes the whole dir,
+                    # marker included: invisible, never inconsistent), and
+                    # fsync latency sits inside the eviction-notice window
+                    root_sync = (chunkstore.urgent_executor()
+                                 if kind == "termination" else
+                                 chunkstore.codec_executor()).submit(
+                        fsync_dir, self.root)
                     self.fault_injector("renamed")
-                    mf.mark_committed(final)
+                    try:
+                        mf.mark_committed(final)
+                    finally:
+                        root_sync.result()
         except BaseException:
             # leave staging dir for post-mortem; it is invisible to readers
             raise

@@ -10,11 +10,12 @@ lowering path on non-TPU backends; on TPU, ops here are the drop-in hot path.
 
 from .decode_attention import decode_attention_ref, flash_decode
 from .flash_attention import attention_ref, flash_attention
+from .quantize import quantize_int8, quantize_int8_ref
 from .rglru_scan import lru_scan, rglru_scan, rglru_scan_ref
 from .ssm_scan import selective_scan, ssm_scan, ssm_scan_ref
 
 __all__ = [
     "attention_ref", "decode_attention_ref", "flash_attention", "flash_decode",
-    "lru_scan", "rglru_scan", "rglru_scan_ref", "selective_scan", "ssm_scan",
-    "ssm_scan_ref",
+    "lru_scan", "quantize_int8", "quantize_int8_ref", "rglru_scan",
+    "rglru_scan_ref", "selective_scan", "ssm_scan", "ssm_scan_ref",
 ]

@@ -1,0 +1,5 @@
+from .ops import quantize_int8
+from .quantize import absmax_2d, quantize_2d
+from .ref import quantize_int8_ref
+
+__all__ = ["absmax_2d", "quantize_2d", "quantize_int8", "quantize_int8_ref"]

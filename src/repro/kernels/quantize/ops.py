@@ -1,0 +1,73 @@
+"""Dispatching wrapper: Pallas kernel on TPU, jnp oracle elsewhere.
+
+``quantize_int8`` is what the checkpoint extract calls. On a TPU backend a
+single-device tensor goes through the fused Pallas pair (absmax reduce +
+quantize); sharded tensors and non-TPU backends take the jitted jnp
+reference, which XLA partitions/fuses itself. All paths produce bit-identical
+int8 payloads (see ref.py), so the choice never changes the checkpoint.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ...checkpoint.serialize import int8_scale_inv
+from .quantize import DEFAULT_BLOCK_ROWS, LANES, absmax_2d, quantize_2d
+from .ref import quantize_int8_ref
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def _pad_2d(x, block_rows, interpret):
+    n = x.size
+    rows = max(1, math.ceil(n / LANES))
+    rows = math.ceil(rows / min(block_rows, rows)) * min(block_rows, rows)
+    flat = jnp.pad(x.reshape(-1), (0, rows * LANES - n))  # 0-pad: |0| neutral
+    return flat.reshape(rows, LANES)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def _absmax_pallas(x2d, block_rows, interpret):
+    return absmax_2d(x2d, block_rows=block_rows, interpret=interpret)[0, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("n", "shape", "block_rows",
+                                             "interpret"))
+def _quantize_pallas(x2d, inv, n, shape, block_rows, interpret):
+    q2d = quantize_2d(inv, x2d, block_rows=block_rows, interpret=interpret)
+    return q2d.reshape(-1)[:n].reshape(shape)
+
+
+def _single_device(x) -> bool:
+    try:
+        return len(x.sharding.device_set) == 1
+    except AttributeError:
+        return True
+
+
+def quantize_int8(x, *, block_rows: int = DEFAULT_BLOCK_ROWS,
+                  interpret: bool = False):
+    """x -> (q int8 of x.shape, scale float32 scalar), absmax/127 scaling.
+
+    The payload stays on device — the point is to cross the device→host
+    link at 1/4 width during urgent checkpoint extraction. Only the absmax
+    *scalar* syncs to host, where ``serialize.int8_scale_inv`` computes the
+    scale/inverse with the exact float32 rounding sequence the host quantize
+    uses (the elementwise device step is multiply-only, which XLA never
+    rewrites) — so device- and host-quantized payloads are bit-identical.
+    """
+    x = jnp.asarray(x)
+    if x.size == 0:
+        return jnp.zeros(x.shape, jnp.int8), jnp.float32(1.0)
+    if interpret or (jax.default_backend() == "tpu" and _single_device(x)):
+        x2d = _pad_2d(x, block_rows, interpret)
+        am = _absmax_pallas(x2d, block_rows, interpret)
+        scale, inv = int8_scale_inv(np.asarray(am))
+        q = _quantize_pallas(x2d, jnp.float32(inv), x.size, tuple(x.shape),
+                             block_rows, interpret)
+        return q, jnp.float32(scale)
+    return quantize_int8_ref(x)

@@ -1,0 +1,30 @@
+"""jnp oracle for absmax-int8 quantization.
+
+Bit-compatible with ``checkpoint.serialize.quantize``: the reduce runs on
+device, but the scalar scale/inverse arithmetic funnels through
+``serialize.int8_scale_inv`` (numpy, float32) and the elementwise step is
+multiply-only — XLA's fast-math rewrites division into reciprocal-multiply,
+so any division-based formula would drift by 1 ulp between host and device.
+The checkpoint format depends on this identity: a device-quantized payload
+must dedup against a host-quantized one in the content-addressed pool.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ...checkpoint.serialize import int8_scale_inv
+
+_absmax_jit = jax.jit(lambda x: jnp.max(jnp.abs(x.astype(jnp.float32))))
+_quant_jit = jax.jit(lambda x, inv: jnp.clip(
+    jnp.round(x.astype(jnp.float32) * inv), -127.0, 127.0).astype(jnp.int8))
+
+
+def quantize_int8_ref(x):
+    """x (any float dtype) -> (q int8, scale float32 scalar)."""
+    if x.size == 0:
+        return jnp.zeros(x.shape, jnp.int8), jnp.float32(1.0)
+    scale, inv = int8_scale_inv(np.asarray(_absmax_jit(x)))
+    return _quant_jit(x, jnp.float32(inv)), jnp.float32(scale)

@@ -31,6 +31,7 @@ from typing import Any, Callable
 import jax
 import numpy as np
 
+from ..checkpoint import sharded
 from ..core.clock import Clock
 from ..core.coordinator import Signal, SpotOnCoordinator
 from ..core.spot_sim import InstancePool
@@ -155,7 +156,12 @@ class SpotTrainer:
                     if step == b:
                         stage_cross_time[si] = clock.now()
                         self.coord.on_stage_end(si, step, state)
-                sig = self.coord.on_step_end(step, lambda s=state: s,
+                # staging handoff: the supplier is invoked lazily, only when
+                # the coordinator decides to checkpoint — prestage kicks off
+                # the device→host DMAs right then, so by the time the
+                # extract's gather pass runs the copies are already in flight
+                sig = self.coord.on_step_end(step,
+                                             lambda s=state: sharded.prestage(s),
                                              step_duration_s=dur)
                 if sig is Signal.PREEMPTING:
                     preempted = True

@@ -1,0 +1,217 @@
+"""Zero-copy/pipelined hot path: mmap fallback, parallel-vs-serial restore
+bit-identity, on-device Pallas quantize parity, legacy pool addresses,
+commit durability (directory fsyncs)."""
+
+import os
+import zlib
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+import ml_dtypes
+
+from repro.checkpoint import CheckpointStore, ChunkRef, extract_snapshot
+from repro.checkpoint import chunkstore, ioutil
+from repro.checkpoint import manifest as mf
+from repro.checkpoint import serialize as ser
+from repro.kernels.quantize import quantize_int8, quantize_int8_ref
+
+
+def mixed_state(step=3):
+    rng = np.random.default_rng(step)
+    return {
+        "params": {"big": rng.standard_normal((256, 1024)).astype(np.float32),
+                   "bf16": rng.standard_normal((64, 32)).astype(ml_dtypes.bfloat16),
+                   "ints": np.arange(4000, dtype=np.int32)},
+        "opt": {"mu": {"big": rng.standard_normal((256, 1024)).astype(np.float32)}},
+        "step": step,
+    }
+
+
+def template():
+    s = mixed_state()
+    return {"params": {k: np.zeros_like(v) for k, v in s["params"].items()},
+            "opt": {"mu": {"big": np.zeros((256, 1024), np.float32)}},
+            "step": 0}
+
+
+def assert_tree_equal(a, b):
+    import jax
+    for x, y in zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+class TestMmapFallback:
+    def test_shard_reader_falls_back_without_mmap(self, tmp_path, monkeypatch):
+        """v1 containers read identically when mmap is unavailable."""
+        arrays = {"a": np.arange(512, dtype=np.float32).reshape(8, 64),
+                  "b": np.arange(100, dtype=np.int32)}
+        pend = [ser.encode_tensor(k, v) for k, v in arrays.items()]
+        path = str(tmp_path / "x.spot")
+        ser.write_shard_file(path, pend)
+        import mmap as mmap_mod
+
+        def broken_mmap(*a, **k):
+            raise OSError("mmap unsupported on this filesystem")
+        monkeypatch.setattr(mmap_mod, "mmap", broken_mmap)
+        r = ser.ShardFileReader(path)
+        for k, v in arrays.items():
+            np.testing.assert_array_equal(r.read(k), v)
+        dst = np.empty((8, 64), np.float32)
+        assert r.read_into("a", dst)
+        np.testing.assert_array_equal(dst, arrays["a"])
+        r.close()
+
+    def test_pool_read_view_falls_back_without_mmap(self, tmp_path, monkeypatch):
+        pool = chunkstore.ChunkPool(str(tmp_path / "chunks"))
+        data = b"q" * 4096
+        h = chunkstore.chunk_digest(data)
+        pool.write(h, data)
+        import mmap as mmap_mod
+        monkeypatch.setattr(mmap_mod, "mmap",
+                            lambda *a, **k: (_ for _ in ()).throw(OSError()))
+        ref = ChunkRef(hash=h, nbytes=4096, raw_len=4096,
+                       crc32=zlib.crc32(data), comp="raw")
+        assert pool.read(ref) == data
+
+
+class TestParallelRestoreBitIdentical:
+    @pytest.mark.parametrize("mode", ["delta", "full"])
+    def test_parallel_matches_serial(self, tmp_path, mode):
+        """read_many (parallel decode) and per-leaf serial read_slice produce
+        byte-identical tensors for both manifest formats."""
+        store = CheckpointStore(str(tmp_path), mode=mode, chunk_size=64 * 1024)
+        s = mixed_state(5)
+        store.save(5, s)
+        _man, reader = store.latest_valid()
+        names = reader.names()
+        par = reader.read_many(names)
+        for n in names:
+            serial = reader.read_slice(n, parallel=False)
+            assert serial.dtype == par[n].dtype
+            np.testing.assert_array_equal(serial, par[n])
+
+    def test_restore_matches_saved_state(self, tmp_path):
+        store = CheckpointStore(str(tmp_path), chunk_size=64 * 1024)
+        s = mixed_state(9)
+        store.save(9, s)
+        got, man = store.restore(template())
+        assert man.step == 9
+        assert_tree_equal(got, s)
+
+
+class TestPallasQuantize:
+    @pytest.mark.parametrize("shape,dtype", [
+        ((257, 33), np.float32), ((512,), np.float32),
+        ((16, 8, 4), "bfloat16"), ((1,), np.float32)])
+    def test_kernel_matches_serialize_quantize(self, shape, dtype):
+        """Interpret-mode Pallas kernel is bit-identical to the host path —
+        the dedup contract between device- and host-quantized chunks."""
+        if dtype == "bfloat16":
+            dtype = ml_dtypes.bfloat16
+        x = np.random.default_rng(0).standard_normal(shape).astype(dtype)
+        q, s = quantize_int8(jnp.asarray(x), interpret=True)
+        qr, sr = quantize_int8_ref(jnp.asarray(x))
+        raw, scale = ser.quantize(x, "int8")
+        assert float(s) == scale == float(sr)
+        np.testing.assert_array_equal(np.asarray(q), raw)
+        np.testing.assert_array_equal(np.asarray(qr), raw)
+
+    def test_all_zero_tensor_scale_one(self):
+        q, s = quantize_int8(jnp.zeros((64, 64)), interpret=True)
+        assert float(s) == 1.0 and not np.asarray(q).any()
+
+    def test_prequant_extract_and_roundtrip(self, tmp_path):
+        """Urgent-style extract quantizes moments on device; the record is a
+        normal int8 record (logical dtype + scale) and restores within the
+        int8 error bound."""
+        s = mixed_state(4)
+        s["opt"]["mu"]["big"] = jnp.asarray(s["opt"]["mu"]["big"])  # on device
+        snap = extract_snapshot(s, step=4, on_device_quantize=ser.is_moment_name)
+        lp = snap.leaves["opt/mu/big"]
+        assert lp.prequant == "int8" and lp.pieces[0][1].dtype == np.int8
+        assert lp.dtype == "float32"
+        # moments crossed at 1/4 width: snapshot accounts the staged bytes
+        full = extract_snapshot(s, step=4)
+        assert snap.nbytes < full.nbytes
+        store = CheckpointStore(str(tmp_path), quantize_moments=True)
+        store.save_snapshot(snap, kind="termination")
+        got, man = store.restore(template())
+        rec = next(r for r in man.tensors if r["name"].startswith("opt/mu/big"))
+        assert rec["codec"].startswith("int8") and rec["dtype"] == "float32"
+        absmax = np.abs(s["opt"]["mu"]["big"]).max()
+        np.testing.assert_allclose(got["opt"]["mu"]["big"], s["opt"]["mu"]["big"],
+                                   atol=absmax / 127.0)
+
+    def test_device_quantize_dedups_against_host_quantize(self, tmp_path):
+        """Same state quantized on device (urgent) and on host (periodic)
+        produces identical chunks — the second save writes ~nothing."""
+        s = mixed_state(4)
+        s["opt"]["mu"]["big"] = jnp.asarray(s["opt"]["mu"]["big"])  # on device
+        store = CheckpointStore(str(tmp_path), quantize_moments=True,
+                                retention=10)
+        host_snap = extract_snapshot(s, step=1)
+        store.save_snapshot(host_snap)
+        dev_snap = extract_snapshot(s, step=2,
+                                    on_device_quantize=ser.is_moment_name)
+        assert dev_snap.leaves["opt/mu/big"].prequant == "int8"
+        info = store.save_snapshot(dev_snap)
+        assert info.new_bytes < 0.01 * info.nbytes, (info.new_bytes, info.nbytes)
+
+
+class TestLegacyPoolAddresses:
+    def test_blake2b_addressed_chunk_still_restores(self, tmp_path):
+        """Chunks written under the old blake2b addressing stay readable:
+        the manifest carries the address, readers never recompute it."""
+        import hashlib
+        pool = chunkstore.ChunkPool(str(tmp_path / "chunks"))
+        payload = np.arange(1000, dtype=np.float32).tobytes()
+        h = hashlib.blake2b(payload, digest_size=20).hexdigest()  # old scheme
+        assert pool.write(h, payload) == len(payload)
+        refs = [ChunkRef(hash=h, nbytes=len(payload), raw_len=len(payload),
+                         crc32=zlib.crc32(payload), comp="raw").to_json()]
+        dst = np.empty(1000, np.float32)
+        chunkstore.read_payload_into(pool, refs, dst)
+        np.testing.assert_array_equal(dst, np.arange(1000, dtype=np.float32))
+
+
+class TestCommitDurability:
+    def test_commit_fsyncs_directories(self, tmp_path, monkeypatch):
+        """The commit protocol syncs every directory whose entries it relies
+        on: the pool fan-out dirs (chunk renames), the step dir (manifest
+        rename + COMMITTED), and the store root (stage->final rename)."""
+        synced: list[str] = []
+        real = ioutil.fsync_dir
+
+        def spy(path):
+            synced.append(os.path.abspath(path))
+            real(path)
+        monkeypatch.setattr(ioutil, "fsync_dir", spy)
+        monkeypatch.setattr(chunkstore, "fsync_dir", spy)
+        monkeypatch.setattr(mf, "fsync_dir", spy)
+        import repro.checkpoint.sharded as sharded_mod
+        import repro.checkpoint.store as store_mod
+        monkeypatch.setattr(sharded_mod, "fsync_dir", spy)
+        monkeypatch.setattr(store_mod, "fsync_dir", spy)
+        store = CheckpointStore(str(tmp_path))
+        store.save(1, mixed_state(1))
+        root = os.path.abspath(str(tmp_path))
+        final = os.path.join(root, mf.step_dirname(1))
+        assert root in synced                      # rename durable
+        assert final in synced                     # COMMITTED durable
+        assert any(chunkstore.CHUNKS_DIRNAME in p for p in synced)  # chunks
+
+    def test_corrupt_chunk_detected_and_healed_via_into_path(self, tmp_path):
+        store = CheckpointStore(str(tmp_path), chunk_size=64 * 1024)
+        store.save(1, mixed_state(1))
+        man = mf.read_manifest(os.path.join(str(tmp_path), mf.step_dirname(1)))
+        victim = sorted(man.chunk_hashes())[0]
+        path = store.pool.path(victim)
+        raw = bytearray(open(path, "rb").read())
+        raw[len(raw) // 2] ^= 0xFF
+        open(path, "wb").write(bytes(raw))
+        _man2, reader = store.latest_valid()
+        with pytest.raises(IOError):
+            reader.validate()
+        assert not os.path.exists(path)            # self-heal removed it
