@@ -11,7 +11,13 @@ Sections:
   term     — beyond-paper: termination-ckpt window feasibility (+int8 moments)
   delta    — beyond-paper: delta vs full checkpoint bytes/latency by churn
   micro    — microbenchmarks: checkpoint save/restore/extract throughput
+  resume   — fast-resume: restore-to-device throughput + simulated MTTR
   roofline — roofline table from the dry-run JSONs (if present)
+
+Every section that records numbers also appends one line (git sha,
+timestamp, numbers) to ``BENCH_trajectory.jsonl`` at the repo root, so the
+perf history across PRs stays recoverable even though the per-section JSONs
+only keep {baseline, current}.
 """
 
 from __future__ import annotations
@@ -25,6 +31,38 @@ def section(name):
 
 
 BENCH_JSON = "BENCH_ckpt.json"
+TRAJECTORY_JSONL = "BENCH_trajectory.jsonl"
+
+
+def _repo_path(name: str) -> str:
+    import os
+    return os.path.join(os.path.dirname(os.path.abspath(__file__)), "..", name)
+
+
+def record_trajectory(section_name: str, results: dict) -> None:
+    """Append one observation to the bench trajectory (never overwrites).
+
+    The per-section BENCH_*.json files hold only {baseline, current}, so a
+    rerun loses the point in between; the jsonl is the full time series —
+    one line per (sha, section) run, grep/jq-able across the repo history.
+    """
+    import json
+    import os
+    import subprocess
+    entry = {"ts": round(time.time(), 1), "section": section_name,
+             "results": results}
+    try:
+        entry["git_sha"] = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"], capture_output=True,
+            text=True, cwd=os.path.dirname(os.path.abspath(__file__)),
+            timeout=10).stdout.strip()
+    except (OSError, subprocess.SubprocessError):
+        entry["git_sha"] = ""
+    try:
+        with open(_repo_path(TRAJECTORY_JSONL), "a") as f:
+            f.write(json.dumps(entry) + "\n")
+    except OSError:
+        pass  # a read-only checkout still gets its numbers on stdout
 
 
 def micro():
@@ -80,8 +118,8 @@ def micro():
         report("store_restore",
                [timed(store.restore, tpl) for _ in range(reps)])
 
-    path = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..",
-                        BENCH_JSON)
+    record_trajectory("micro", results)
+    path = _repo_path(BENCH_JSON)
     doc = {}
     if os.path.exists(path):
         try:
@@ -105,7 +143,7 @@ def micro():
 
 def main() -> None:
     want = set(sys.argv[1:]) or {"table1", "fig2", "fig3", "fleet", "term",
-                                 "delta", "micro", "roofline"}
+                                 "delta", "micro", "resume", "roofline"}
     if "table1" in want:
         section("Table I: execution time under Spot-on (virtual-time replay)")
         from . import table1
@@ -133,6 +171,10 @@ def main() -> None:
     if "micro" in want:
         section("micro: checkpoint path throughput")
         micro()
+    if "resume" in want:
+        section("resume: restore-to-device throughput + simulated MTTR")
+        from . import resume_bench
+        record_trajectory("resume", resume_bench.main())
     if "roofline" in want:
         section("roofline table (from dry-run artifacts)")
         try:

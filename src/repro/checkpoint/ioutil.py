@@ -47,12 +47,17 @@ def mmap_view(path: str) -> memoryview:
 
 def release_view(view: memoryview) -> None:
     """Release a view from ``mmap_view`` and close its mapping now rather
-    than at GC time (an open mapping pins the file on some filesystems)."""
+    than at GC time (an open mapping pins the file on some filesystems).
+    If other exports of the mapping are still alive (zero-copy restore
+    payloads slice it), the close is deferred to their GC instead."""
     backing = view.obj
     view.release()
     close = getattr(backing, "close", None)   # mmap has close(); bytes doesn't
     if close is not None:
-        close()
+        try:
+            close()
+        except BufferError:
+            pass  # a live payload view still exports this mapping
 
 
 def fsync_dir(path: str) -> None:

@@ -267,9 +267,21 @@ def alloc_payload(dtype_name: str, shape, quant: str) -> np.ndarray:
 
 def finish_payload(dst: np.ndarray, *, dtype_name: str, quant: str,
                    scale: float | None) -> np.ndarray:
-    """Filled payload array -> logical tensor (dequantize if needed)."""
+    """Filled payload array -> logical tensor (dequantize if needed).
+
+    The dequantize multiplies in float32 with a float32 scale — the exact
+    arithmetic of the device dequant kernel (kernels/quantize), so host- and
+    device-restored tensors are bit-identical. A float32 target multiplies
+    straight into the output dtype (one allocation); other targets need the
+    float32 intermediate before the final cast, but never a second astype
+    when the cast is a no-op.
+    """
     if quant == "int8":
-        return (dst.astype(np.float32) * scale).astype(name_to_dtype(dtype_name))
+        target = name_to_dtype(dtype_name)
+        s = np.float32(scale)
+        if target == np.float32:
+            return np.multiply(dst, s, dtype=np.float32)
+        return (dst.astype(np.float32) * s).astype(target)
     return dst
 
 
@@ -416,9 +428,31 @@ class ShardFileReader:
         and shape match the stored payload; returns False (caller falls back
         to ``read``) otherwise. One copy: mmap slice -> dst."""
         rec = self.records[name]
+        quant, _comp = split_codec(rec.codec)
+        if quant:
+            return False
+        return self.read_payload_into(name, dst)
+
+    def read_payload_view(self, name: str) -> memoryview | None:
+        """crc-validated zero-copy view of an *uncompressed* tensor's stored
+        payload (mmap slice — a device transfer can copy straight from the
+        page cache). None for compressed records; the view's lifetime is
+        tied to this reader's mapping."""
+        rec = self.records[name]
+        _quant, comp = split_codec(rec.codec)
+        if comp:
+            return None
+        return self._payload_view(rec)
+
+    def read_payload_into(self, name: str, dst: np.ndarray) -> bool:
+        """Fill ``dst`` with the *stored* payload (post-decompress,
+        pre-dequantize): for an int8-coded tensor ``dst`` must be int8 —
+        this is what lets the streaming restore ship quantized payloads to
+        the device at 1/4 width and widen them there."""
+        rec = self.records[name]
         quant, comp = split_codec(rec.codec)
-        if (quant or tuple(dst.shape) != tuple(rec.shape)
-                or dst.dtype != name_to_dtype(rec.dtype)
+        if (tuple(dst.shape) != tuple(rec.shape)
+                or dst.dtype != stored_dtype(rec.dtype, quant)
                 or not dst.flags.c_contiguous):
             return False
         buf = self._payload_view(rec)

@@ -17,8 +17,14 @@ Save path, two phases (so the trainer only blocks on the cheap one):
      Runs in the async writer thread (checkpoint/IO overlaps training).
 
 Restore is pipelined too: tensors decode in parallel on the codec executor
-(mmap reads, crc and decompression release the GIL) and each tensor
-reassembles into a preallocated destination buffer — see CheckpointReader.
+(mmap reads, digest validation and decompression release the GIL) and each
+tensor reassembles into a preallocated destination buffer — see
+CheckpointReader. ``restore_to_template_streaming`` goes further for
+device-destined restores: decode overlaps the host→device transfers, raw
+single-chunk payloads stream from validated mmap views (page cache →
+device, no intermediate host buffer), and int8-quantized payloads cross
+the link at 1/4 width and widen on device — the restore mirror of the
+on-device quantize below, and the heart of the fast-resume (MTTR) path.
 
 Restore is **mesh-independent** ("elastic"): the manifest stores global shapes
 and per-piece global indices, and ``restore_to_template`` re-slices saved
@@ -50,6 +56,11 @@ from . import serialize as ser
 from .ioutil import fsync_dir
 
 Index = tuple[tuple[int, int], ...]
+
+# leaves below this stored size batch into one executor task on restore —
+# per-task overhead beats decode cost for scalar/counter leaves, and configs
+# can carry hundreds of them
+SMALL_LEAF_BYTES = 4096
 
 
 @dataclass
@@ -301,6 +312,29 @@ def write_snapshot_delta(
 # restore
 # ---------------------------------------------------------------------------
 
+def _submit_leaf_jobs(ex, names, size_of, run_one):
+    """One decode job per leaf, coalescing sub-4KiB leaves into one task
+    (per-task executor overhead beats decode cost for scalar/counter
+    leaves, and configs can carry hundreds). Returns ({name: resolver},
+    submitted futures) — resolvers block on and return that leaf's result;
+    the futures list is for cancel/quiesce on failure."""
+    small = [n for n in names if size_of(n) < SMALL_LEAF_BYTES]
+    resolve: dict[str, Callable[[], Any]] = {}
+    futs: list = []
+    if len(small) >= 2:
+        small_fut = ex.submit(
+            lambda ns=tuple(small): {n: run_one(n) for n in ns})
+        futs.append(small_fut)
+        for n in small:
+            resolve[n] = (lambda n=n: small_fut.result()[n])
+    for n in names:
+        if n not in resolve:
+            fut = ex.submit(run_one, n)
+            futs.append(fut)
+            resolve[n] = fut.result
+    return resolve, futs
+
+
 class CheckpointReader:
     """Random access over a committed checkpoint's tensors.
 
@@ -388,8 +422,17 @@ class CheckpointReader:
         a job must never block on sub-jobs queued behind it.
         """
         gshape = self.global_shape(name)
+        full = tuple((0, int(s)) for s in gshape)
         if index is None:
-            index = tuple((0, s) for s in gshape)
+            index = full
+        # single-piece fast path: the decoded piece IS the result — no
+        # destination buffer, no assembly copy. Quantized pieces in
+        # particular would otherwise materialize at logical width twice
+        # (dequantized piece, then a copy into ``out``).
+        if tuple(tuple(int(x) for x in p) for p in index) == full:
+            rec = self.single_piece_record(name)
+            if rec is not None:
+                return self._read_piece_into(rec, None, parallel=parallel)
         out_shape = tuple(stop - start for start, stop in index)
         out = np.empty(out_shape, dtype=self.dtype(name))
         filled = 0
@@ -418,18 +461,74 @@ class CheckpointReader:
                 f"({filled} of {int(np.prod(out_shape))} elements)")
         return out
 
+    def stored_nbytes(self, name: str) -> int:
+        """Stored (encoded) bytes across all of ``name``'s pieces."""
+        return sum(int(r.get("nbytes", 0)) for r in self.by_name[name])
+
+    def single_piece_record(self, name: str) -> dict | None:
+        """The one record covering the whole tensor, or None when the tensor
+        was saved as multiple shard pieces (streaming whole-tensor reads and
+        device-side dequant need a single payload with a single scale)."""
+        recs = self.by_name[name]
+        if len(recs) != 1:
+            return None
+        rec = recs[0]
+        full = tuple((0, int(s)) for s in rec["global_shape"])
+        if tuple(tuple(int(x) for x in p) for p in rec["index"]) != full:
+            return None
+        return rec
+
+    def read_payload(self, name: str, *, parallel: bool = True
+                     ) -> tuple[np.ndarray, str, str, float | None]:
+        """Stored (post-decompress, pre-dequantize) payload of a
+        single-full-piece tensor: (payload, logical dtype name, quant,
+        scale). An int8-coded record's payload comes back as int8 — the
+        streaming restore ships it across the host→device link at 1/4 the
+        logical width and widens it on device."""
+        rec = self.single_piece_record(name)
+        if rec is None:
+            raise ValueError(f"{name}: not a single full-coverage piece")
+        quant, _comp = ser.split_codec(rec.get("codec", "raw"))
+        pdtype = ser.stored_dtype(rec["dtype"], quant)
+        shape = tuple(rec["shape"])
+        if "chunks" in rec:
+            crefs = rec["chunks"]
+            if len(crefs) == 1:
+                ref = chunkstore.ChunkRef.from_json(crefs[0])
+                if ref.comp in ("", "raw"):
+                    # zero-copy: validated mmap view of the pool chunk —
+                    # the device transfer copies straight from the page
+                    # cache, no intermediate host buffer at all
+                    view = self.chunk_pool.read_view(ref)
+                    arr = np.frombuffer(view, dtype=pdtype).reshape(shape)
+                    return arr, rec["dtype"], quant, rec.get("scale")
+            dst = ser.alloc_payload(rec["dtype"], shape, quant)
+            chunkstore.read_payload_into(
+                self.chunk_pool, crefs, dst,
+                executor=chunkstore.codec_executor() if parallel else None)
+            return dst, rec["dtype"], quant, rec.get("scale")
+        view = self._reader(rec["file"]).read_payload_view(rec["name"])
+        if view is not None:
+            arr = np.frombuffer(view, dtype=pdtype).reshape(shape)
+            return arr, rec["dtype"], quant, rec.get("scale")
+        dst = ser.alloc_payload(rec["dtype"], shape, quant)
+        if not self._reader(rec["file"]).read_payload_into(rec["name"], dst):
+            raise IOError(f"{name}: container payload does not match its record")
+        return dst, rec["dtype"], quant, rec.get("scale")
+
     def read_many(self, names: list[str]) -> dict[str, np.ndarray]:
-        """Read whole tensors in parallel (one codec-executor job per leaf;
-        inside each job chunk decode is serial — no nested submission)."""
-        ex = chunkstore.codec_executor()
-        futs = [(n, ex.submit(self.read_slice, n, None, parallel=False))
-                for n in names]
+        """Read whole tensors in parallel (one codec-executor job per leaf,
+        sub-4KiB leaves coalesced — see ``_submit_leaf_jobs``; inside each
+        job chunk decode is serial — no nested submission)."""
+        resolve, futs = _submit_leaf_jobs(
+            chunkstore.codec_executor(), names, self.stored_nbytes,
+            lambda n: self.read_slice(n, None, parallel=False))
         try:
-            return {n: f.result() for n, f in futs}
+            return {n: resolve[n]() for n in names}
         except BaseException:
-            for _n, f in futs:
+            for f in futs:
                 f.cancel()
-            futures_wait([f for _n, f in futs])
+            futures_wait(futs)
             raise
 
     def validate(self) -> None:
@@ -443,6 +542,32 @@ def _idx_of_slices(slices, shape) -> Index:
     return _slices_to_index(slices, shape)
 
 
+def _leaf_sharding(leaf):
+    """The template leaf's device sharding, or None for a host leaf."""
+    sharding = getattr(leaf, "sharding", None)
+    if sharding is None or not hasattr(sharding, "device_set"):
+        return None
+    return sharding
+
+
+def _check_template(reader: CheckpointReader, named: dict) -> None:
+    for name, leaf in named.items():
+        if name not in reader.by_name:
+            raise KeyError(f"checkpoint missing leaf {name!r}; has {sorted(reader.by_name)[:8]}...")
+        if hasattr(leaf, "shape") and reader.global_shape(name) != tuple(leaf.shape):
+            raise ValueError(
+                f"{name}: shape mismatch ckpt={reader.global_shape(name)} "
+                f"vs template={tuple(leaf.shape)}")
+
+
+def _host_leaf_value(name: str, leaf, host: dict):
+    """Finalize one host-destined leaf from its decoded array (scalar cast
+    back to its python type; arrays cast to the template dtype)."""
+    if isinstance(leaf, (int, float, bool)) and not isinstance(leaf, np.generic):
+        return type(leaf)(host[name].reshape(())[()])
+    return host[name].astype(leaf.dtype, copy=False)
+
+
 def restore_to_template(reader: CheckpointReader, template) -> Any:
     """Restore a pytree matching `template`'s structure, shapes and shardings.
 
@@ -453,36 +578,159 @@ def restore_to_template(reader: CheckpointReader, template) -> Any:
     Host-destined leaves decode in parallel (``read_many``); device-sharded
     leaves decode per-device-slice with chunk-level parallelism inside each
     callback. Both paths are bit-identical to a serial restore — only the
-    schedule differs.
+    schedule differs. For restores that should land on device, see
+    ``restore_to_template_streaming``, which additionally overlaps decode
+    with the host→device transfers.
     """
     named = ser.flatten_state(template)
     treedef = jax.tree_util.tree_structure(template)
-    host_names = []
-    for name, leaf in named.items():
-        if name not in reader.by_name:
-            raise KeyError(f"checkpoint missing leaf {name!r}; has {sorted(reader.by_name)[:8]}...")
-        sharding = getattr(leaf, "sharding", None)
-        if hasattr(leaf, "shape") and reader.global_shape(name) != tuple(leaf.shape):
-            raise ValueError(
-                f"{name}: shape mismatch ckpt={reader.global_shape(name)} "
-                f"vs template={tuple(leaf.shape)}")
-        if sharding is None or not hasattr(sharding, "device_set"):
-            host_names.append(name)
+    _check_template(reader, named)
+    host_names = [n for n, leaf in named.items() if _leaf_sharding(leaf) is None]
     host = reader.read_many(host_names)
     out = {}
     for name, leaf in named.items():
-        if isinstance(leaf, (int, float, bool)) and not isinstance(leaf, np.generic):
-            out[name] = type(leaf)(host[name].reshape(())[()])
+        if name in host:
+            out[name] = _host_leaf_value(name, leaf, host)
             continue
         shape = tuple(leaf.shape)
         dtype = leaf.dtype
-        if name in host:
-            out[name] = host[name].astype(dtype, copy=False)
-        else:
-            sharding = leaf.sharding
 
-            def cb(idx, _name=name, _shape=shape, _dtype=dtype):
-                region = _idx_of_slices(idx, _shape)
-                return reader.read_slice(_name, region).astype(_dtype, copy=False)
-            out[name] = jax.make_array_from_callback(shape, sharding, cb)
+        def cb(idx, _name=name, _shape=shape, _dtype=dtype):
+            region = _idx_of_slices(idx, _shape)
+            return reader.read_slice(_name, region).astype(_dtype, copy=False)
+        out[name] = jax.make_array_from_callback(shape, leaf.sharding, cb)
+    return jax.tree_util.tree_unflatten(treedef, [out[n] for n in named])
+
+
+def _whole_tensor_sharding(sharding, shape: tuple[int, ...]) -> bool:
+    """True when every addressable device wants the full tensor (single
+    device or fully replicated) — the whole-payload streaming fast path."""
+    try:
+        imap = sharding.devices_indices_map(shape)
+    except Exception:
+        return False
+    full = tuple((0, s) for s in shape)
+    return all(_slices_to_index(idx, shape) == full for idx in imap.values())
+
+
+def restore_to_template_streaming(reader: CheckpointReader, template) -> Any:
+    """Streaming disk→device restore: ``restore_to_template`` semantics with
+    the read→decode→``jax.device_put`` stages pipelined.
+
+    Every leaf's read/decode job is submitted to the codec executor up
+    front (tiny leaves batched into one task, int8-quantized leaves queued
+    first); the main thread consumes completions and immediately issues the
+    asynchronous host→device transfer — so disk IO, decompression and H2D
+    DMA of different tensors overlap instead of serializing. int8-quantized
+    payloads cross the link at stored (1/4) width and widen on device in a
+    single batched dispatch (``kernels.quantize.dequantize_int8_many``)
+    whose execution overlaps the remaining full-width decodes; sharded
+    template leaves decode per-device-slice from prefetched regions;
+    host-destined leaves (no device sharding on the template leaf) come out
+    exactly as the serial path produces them. Bit-identical to
+    ``restore_to_template`` — only the schedule differs.
+    """
+    from ..kernels.quantize import dequantize_int8_many
+
+    named = ser.flatten_state(template)
+    treedef = jax.tree_util.tree_structure(template)
+    _check_template(reader, named)
+    ex = chunkstore.codec_executor()
+    all_futs: list = []
+
+    # --- planning pass ----------------------------------------------------
+    plans: dict[str, str] = {}
+    regions: dict[str, dict[Index, Any]] = {}
+    for name, leaf in named.items():
+        sharding = _leaf_sharding(leaf)
+        if sharding is None:
+            plans[name] = "host"
+        elif (_whole_tensor_sharding(sharding, tuple(leaf.shape))
+                and reader.single_piece_record(name) is not None):
+            rec = reader.single_piece_record(name)
+            quant, _ = ser.split_codec(rec.get("codec", "raw"))
+            plans[name] = "quantized" if quant == "int8" else "payload"
+        else:
+            plans[name] = "sharded"
+
+    # --- submission pass: every leaf's decode work enters the executor.
+    # Quantized payloads go first: they are the smallest bytes-on-disk per
+    # logical byte, so their decode+H2D finishes early and the batched
+    # on-device widen runs *under* the remaining full-width decodes.
+    def _run_one(name: str):
+        if plans[name] == "host":
+            return reader.read_slice(name, None, parallel=False)
+        return reader.read_payload(name, parallel=False)
+
+    order = sorted((n for n, p in plans.items() if p != "sharded"),
+                   key=lambda n: plans[n] != "quantized")
+    resolve, job_futs = _submit_leaf_jobs(ex, order, reader.stored_nbytes,
+                                          _run_one)
+    all_futs.extend(job_futs)
+    for name, leaf in named.items():
+        if plans[name] != "sharded":
+            continue
+        per_region: dict[Index, Any] = {}
+        for idx in leaf.sharding.devices_indices_map(tuple(leaf.shape)).values():
+            key = _slices_to_index(idx, tuple(leaf.shape))
+            if key not in per_region:
+                per_region[key] = ex.submit(reader.read_slice, name, key,
+                                            parallel=False)
+        regions[name] = per_region
+        all_futs.extend(per_region.values())
+
+    # --- consumption: transfers issue as decodes land ---------------------
+    out = {}
+    try:
+        # quantized leaves first: 1/4-width H2D per payload as it lands,
+        # then ONE batched widen/multiply/cast dispatch for all of them —
+        # bit-identical to serialize.finish_payload
+        qnames = [n for n in order if plans[n] == "quantized"]
+        if qnames:
+            payloads, q_scales, q_dtypes = [], [], []
+            for name in qnames:
+                payload, dtype_name, _quant, scale = resolve[name]()
+                payloads.append(payload)
+                q_scales.append(scale)
+                q_dtypes.append(dtype_name)
+            # one batched H2D for all quantized payloads (python-side
+            # device_put overhead is per *call*, not per array)
+            q_devs = jax.device_put(
+                payloads, [named[n].sharding for n in qnames])
+            for name, arr in zip(qnames, dequantize_int8_many(
+                    q_devs, q_scales, q_dtypes)):
+                if arr.dtype != np.dtype(named[name].dtype):
+                    arr = arr.astype(named[name].dtype)
+                out[name] = arr
+        # full-width payloads: resolve in decode order, then one batched H2D
+        # — per-call device_put python overhead holds the GIL the decode
+        # threads still need, so fewer/larger transfer calls win
+        pnames = [n for n in order if plans[n] == "payload"]
+        if pnames:
+            staged = []
+            for name in pnames:
+                payload, _dtype_name, _quant, _scale = resolve[name]()
+                staged.append(payload.astype(named[name].dtype, copy=False))
+            for name, arr in zip(pnames, jax.device_put(
+                    staged, [named[n].sharding for n in pnames])):
+                out[name] = arr
+        for name, leaf in named.items():
+            plan = plans[name]
+            if plan in ("quantized", "payload"):
+                continue
+            if plan == "host":
+                out[name] = _host_leaf_value(name, leaf, {name: resolve[name]()})
+            else:
+                shape = tuple(leaf.shape)
+                dtype = leaf.dtype
+
+                def cb(idx, _shape=shape, _dtype=dtype, _futs=regions[name]):
+                    key = _idx_of_slices(idx, _shape)
+                    return _futs[key].result().astype(_dtype, copy=False)
+                out[name] = jax.make_array_from_callback(shape, leaf.sharding, cb)
+    except BaseException:
+        for f in all_futs:
+            f.cancel()
+        futures_wait(all_futs)
+        raise
     return jax.tree_util.tree_unflatten(treedef, [out[n] for n in named])

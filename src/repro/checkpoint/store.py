@@ -233,8 +233,14 @@ class CheckpointStore:
                 return opened
         return None
 
-    def restore(self, template, *, step: int | None = None):
-        """Restore into `template`'s structure/shardings. Returns (state, manifest)."""
+    def restore(self, template, *, step: int | None = None,
+                streaming: bool = False):
+        """Restore into `template`'s structure/shardings. Returns (state, manifest).
+
+        ``streaming`` pipelines read→decode→device_put per tensor (see
+        ``sharded.restore_to_template_streaming``) — bit-identical results,
+        shorter eviction→first-step-back window when template leaves carry
+        device shardings."""
         if step is not None:
             opened = self._try_open(step, validate=self.validate_on_restore)
         else:
@@ -242,7 +248,10 @@ class CheckpointStore:
         if opened is None:
             raise FileNotFoundError(f"no valid checkpoint under {self.root}")
         man, reader = opened
-        state = sharded.restore_to_template(reader, template)
+        if streaming:
+            state = sharded.restore_to_template_streaming(reader, template)
+        else:
+            state = sharded.restore_to_template(reader, template)
         return state, man
 
     # -- maintenance -----------------------------------------------------------

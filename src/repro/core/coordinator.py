@@ -25,6 +25,14 @@ termination checkpoint fits the eviction-notice window at low churn.
 Checkpoints written through the coordinator carry ``{"provider", "instance"}``
 tags in their manifest extras, so a fleet's shared store records which cloud
 wrote each checkpoint.
+
+The coordinator also owns **MTTR** (mean time to recovery — eviction to the
+first training step completed on the replacement): ``detach`` starts the
+window, the first ``on_step_end`` after it closes the window, and samples
+accumulate in ``CoordinatorStats.mttr_samples`` plus the ledger's
+observation trail (``TimeLedger.observe``). Restores default to the
+streaming disk→device pipeline, which is what the fast-resume benchmark
+(``benchmarks/resume_bench.py``) measures.
 """
 
 from __future__ import annotations
@@ -99,6 +107,15 @@ class CoordinatorStats:
     ckpt_bytes_written: int = 0
     ckpt_time_s: float = 0.0
     restore_time_s: float = 0.0
+    # MTTR: eviction (detach) → first training step completed on the
+    # replacement. Covers provisioning, restore, recompilation and data
+    # fast-forward — the full window the fast-resume pipeline minimizes.
+    mttr_samples: list[float] = field(default_factory=list)
+
+    @property
+    def mttr_mean_s(self) -> float:
+        return (sum(self.mttr_samples) / len(self.mttr_samples)
+                if self.mttr_samples else 0.0)
 
 
 class SpotOnCoordinator:
@@ -128,6 +145,9 @@ class SpotOnCoordinator:
         self._last_periodic_at = clock.now()
         self._handled_notices: set[str] = set()
         self._last_poll_at = -float("inf")
+        # MTTR bookkeeping: set at detach (the eviction moment), consumed by
+        # the first completed step on the replacement instance
+        self._evicted_at: float | None = None
 
     @property
     def time_model(self) -> TimeModel | None:
@@ -144,8 +164,10 @@ class SpotOnCoordinator:
             self.straggler.reset()
 
     def detach(self) -> None:
+        """Unbind from a dying instance; starts the MTTR clock."""
         self._metadata = None
         self._instance_name = None
+        self._evicted_at = self.clock.now()
 
     # -- checkpoint actions --------------------------------------------------------
 
@@ -284,6 +306,12 @@ class SpotOnCoordinator:
     def on_step_end(self, step: int, state_provider: Callable[[], Any],
                     step_duration_s: float | None = None) -> Signal:
         now = self.clock.now()
+        if self._evicted_at is not None:
+            # first step completed since the eviction: close the MTTR window
+            mttr = now - self._evicted_at
+            self.stats.mttr_samples.append(mttr)
+            self.ledger.observe("mttr", mttr)
+            self._evicted_at = None
         self._drain_async_stats()
         # 1. metadata poll (rate-limited like the paper's curl loop)
         preempt, rebalance = self._poll_notices(now)
@@ -323,11 +351,16 @@ class SpotOnCoordinator:
 
     # -- restart ----------------------------------------------------------------------
 
-    def restore_latest(self, template):
-        """Most-recent-valid restore; returns (state, manifest) or None."""
+    def restore_latest(self, template, *, streaming: bool = True):
+        """Most-recent-valid restore; returns (state, manifest) or None.
+
+        ``streaming`` (default) pipelines disk→decode→device transfers —
+        bit-identical state, shorter resume leg of the MTTR window. The
+        modeled read cost is charged under the ``restore`` category either
+        way (the schedule changes, the bytes moved do not)."""
         t0 = self.clock.now()
         try:
-            state, man = self.store.restore(template)
+            state, man = self.store.restore(template, streaming=streaming)
         except FileNotFoundError:
             return None
         nbytes = sum(t["nbytes"] for t in man.tensors)

@@ -40,11 +40,18 @@ class TimeModel:
 
 @dataclass
 class TimeLedger:
-    """Charges modeled durations to a clock and accounts them by category."""
+    """Charges modeled durations to a clock and accounts them by category.
+
+    Besides *charges* (which advance a VirtualClock), the ledger keeps
+    *observations*: measured windows — MTTR, the eviction→first-step-back
+    span — whose time already elapsed on the clock and must not be charged
+    again, but which belong in the same audit trail.
+    """
 
     clock: Clock
     time_model: TimeModel | None = None
     charged: dict[str, float] = field(default_factory=dict)
+    observed: dict[str, list[float]] = field(default_factory=dict)
 
     @property
     def virtual(self) -> bool:
@@ -80,6 +87,17 @@ class TimeLedger:
         self.clock.advance(step_time_s)
         self.charged["step"] = self.charged.get("step", 0.0) + step_time_s
         return step_time_s
+
+    # -- observations ---------------------------------------------------------
+
+    def observe(self, category: str, seconds: float) -> None:
+        """Record a measured window (e.g. one MTTR sample) without moving
+        the clock — the duration already elapsed; charging it again would
+        double-count it."""
+        self.observed.setdefault(category, []).append(seconds)
+
+    def observed_total(self, category: str) -> float:
+        return sum(self.observed.get(category, ()))
 
     def total(self, category: str | None = None) -> float:
         if category is not None:

@@ -1,5 +1,7 @@
-from .ops import quantize_int8
-from .quantize import absmax_2d, quantize_2d
-from .ref import quantize_int8_ref
+from .ops import dequantize_int8, dequantize_int8_many, quantize_int8
+from .quantize import absmax_2d, dequantize_2d, quantize_2d
+from .ref import dequantize_int8_ref, quantize_int8_ref
 
-__all__ = ["absmax_2d", "quantize_2d", "quantize_int8", "quantize_int8_ref"]
+__all__ = ["absmax_2d", "dequantize_2d", "dequantize_int8",
+           "dequantize_int8_many", "dequantize_int8_ref", "quantize_2d",
+           "quantize_int8", "quantize_int8_ref"]

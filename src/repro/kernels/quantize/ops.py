@@ -1,10 +1,12 @@
 """Dispatching wrapper: Pallas kernel on TPU, jnp oracle elsewhere.
 
-``quantize_int8`` is what the checkpoint extract calls. On a TPU backend a
-single-device tensor goes through the fused Pallas pair (absmax reduce +
-quantize); sharded tensors and non-TPU backends take the jitted jnp
+``quantize_int8`` is what the checkpoint extract calls; ``dequantize_int8``
+is the streaming restore's mirror. On a TPU backend a single-device tensor
+goes through the fused Pallas kernels (absmax reduce + quantize, or the
+dequantize widen); sharded tensors and non-TPU backends take the jitted jnp
 reference, which XLA partitions/fuses itself. All paths produce bit-identical
-int8 payloads (see ref.py), so the choice never changes the checkpoint.
+payloads (see ref.py), so the choice never changes the checkpoint — or the
+restored state.
 """
 
 from __future__ import annotations
@@ -17,8 +19,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from ...checkpoint.serialize import int8_scale_inv
-from .quantize import DEFAULT_BLOCK_ROWS, LANES, absmax_2d, quantize_2d
-from .ref import quantize_int8_ref
+from .quantize import (DEFAULT_BLOCK_ROWS, LANES, absmax_2d, dequantize_2d,
+                       quantize_2d)
+from .ref import dequantize_int8_ref, quantize_int8_ref
 
 
 @functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
@@ -71,3 +74,65 @@ def quantize_int8(x, *, block_rows: int = DEFAULT_BLOCK_ROWS,
                              block_rows, interpret)
         return q, jnp.float32(scale)
     return quantize_int8_ref(x)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "shape", "dtype",
+                                             "block_rows", "interpret"))
+def _dequantize_pallas(q2d, scale, n, shape, dtype, block_rows, interpret):
+    x2d = dequantize_2d(scale, q2d, out_dtype=dtype, block_rows=block_rows,
+                        interpret=interpret)
+    return x2d.reshape(-1)[:n].reshape(shape)
+
+
+def dequantize_int8(q, scale, *, dtype, block_rows: int = DEFAULT_BLOCK_ROWS,
+                    interpret: bool = False):
+    """(q int8, absmax scale) -> tensor of ``dtype`` — the restore mirror of
+    ``quantize_int8``.
+
+    The int8 payload crosses the host→device link at 1/4 the logical width;
+    the widen/multiply/cast runs on device. The scalar arithmetic is
+    multiply-only with a float32 scale (the one stored in the checkpoint
+    record), so the result is bit-identical to the host
+    ``serialize.finish_payload`` path — the streaming restore's correctness
+    contract.
+    """
+    q = jnp.asarray(q)
+    dtype = np.dtype(dtype)
+    if q.size == 0:
+        return jnp.zeros(q.shape, dtype)
+    if interpret or (jax.default_backend() == "tpu" and _single_device(q)):
+        q2d = _pad_2d(q, block_rows, interpret)
+        return _dequantize_pallas(q2d, jnp.float32(scale), q.size,
+                                  tuple(q.shape), dtype, block_rows, interpret)
+    return dequantize_int8_ref(q, scale, dtype=dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("dtypes",))
+def _dequant_many_jit(qs, scales, dtypes):
+    return tuple((q.astype(jnp.float32) * s).astype(np.dtype(d))
+                 for q, s, d in zip(qs, scales, dtypes))
+
+
+def dequantize_int8_many(qs, scales, dtype_names):
+    """Batch dequantize: one dispatch for a whole restore's int8 payloads.
+
+    A streaming restore widens many small optimizer-moment tensors; paying a
+    per-tensor dispatch would put ~N×dispatch-latency back into the MTTR
+    window that the 1/4-width transfer just saved. On TPU each tensor still
+    goes through the fused Pallas kernel (per-tensor dispatch is cheap next
+    to the H2D savings there); elsewhere a single jitted program widens all
+    of them — same multiply-only float32 arithmetic, bit-identical either
+    way. ``scales`` may be floats; dtype names key the jit cache.
+    """
+    if not qs:
+        return []
+    if jax.default_backend() == "tpu" and all(_single_device(q) for q in qs):
+        return [dequantize_int8(q, s, dtype=d)
+                for q, s, d in zip(qs, scales, dtype_names)]
+    # np.float32, not jnp.float32: the scalars enter the jit as arguments,
+    # and an eager jnp conversion would pay one dispatch per scale — the
+    # exact per-tensor latency this batched call exists to avoid
+    return list(_dequant_many_jit(
+        tuple(qs),
+        tuple(np.float32(s) for s in scales),
+        tuple(str(d) for d in dtype_names)))

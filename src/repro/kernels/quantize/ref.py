@@ -20,6 +20,9 @@ from ...checkpoint.serialize import int8_scale_inv
 _absmax_jit = jax.jit(lambda x: jnp.max(jnp.abs(x.astype(jnp.float32))))
 _quant_jit = jax.jit(lambda x, inv: jnp.clip(
     jnp.round(x.astype(jnp.float32) * inv), -127.0, 127.0).astype(jnp.int8))
+_dequant_jit = jax.jit(
+    lambda q, scale, dtype: (q.astype(jnp.float32) * scale).astype(dtype),
+    static_argnames=("dtype",))
 
 
 def quantize_int8_ref(x):
@@ -28,3 +31,10 @@ def quantize_int8_ref(x):
         return jnp.zeros(x.shape, jnp.int8), jnp.float32(1.0)
     scale, inv = int8_scale_inv(np.asarray(_absmax_jit(x)))
     return _quant_jit(x, jnp.float32(inv)), jnp.float32(scale)
+
+
+def dequantize_int8_ref(q, scale, *, dtype):
+    """(q int8, absmax scale) -> tensor of ``dtype``; multiply-only in
+    float32 with a float32 scale, bit-identical to the host
+    ``serialize.finish_payload`` and the Pallas dequant kernel."""
+    return _dequant_jit(jnp.asarray(q), jnp.float32(scale), np.dtype(dtype))

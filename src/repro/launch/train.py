@@ -20,6 +20,38 @@ import json
 import os
 
 
+def setup_compilation_cache(cache_dir: str) -> bool:
+    """Point XLA's persistent compilation cache at a directory that survives
+    instance replacement (the checkpoint volume is the natural home).
+
+    This is the compile leg of the fast-resume pipeline: a replacement
+    instance deserializes the step executable from the shared cache instead
+    of re-running XLA passes, so `SpotTrainer.resume`'s overlapped
+    precompile degenerates to a disk read. Thresholds are zeroed because on
+    a spot fleet *every* recompile sits inside the MTTR window. Best-effort
+    across JAX versions; returns False when unsupported.
+    """
+    import jax
+
+    try:
+        os.makedirs(cache_dir, exist_ok=True)
+        jax.config.update("jax_compilation_cache_dir", cache_dir)
+        for knob, val in (("jax_persistent_cache_min_compile_time_secs", 0.0),
+                          ("jax_persistent_cache_min_entry_size_bytes", 0)):
+            try:
+                jax.config.update(knob, val)
+            except (AttributeError, ValueError):  # knob renamed/absent
+                pass
+        return True
+    except (AttributeError, ValueError, OSError):
+        try:  # pre-config-flag JAX: explicit initializer API
+            from jax.experimental.compilation_cache import compilation_cache
+            compilation_cache.set_cache_dir(cache_dir)
+            return True
+        except Exception:
+            return False
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -38,10 +70,16 @@ def main(argv=None):
                     help="inject an eviction every N seconds (0 = none)")
     ap.add_argument("--provision-delay", type=float, default=5.0)
     ap.add_argument("--quantize-moments", type=int, default=0)
+    ap.add_argument("--compile-cache-dir", default="",
+                    help="persistent XLA compilation cache (e.g. a dir on "
+                         "the checkpoint volume); empty disables")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--remat", default="none")
     ap.add_argument("--microbatches", type=int, default=1)
     args = ap.parse_args(argv)
+
+    if args.compile_cache_dir:
+        setup_compilation_cache(args.compile_cache_dir)
 
     from ..configs import get_config, get_smoke_config
     from ..checkpoint import CheckpointStore

@@ -1,5 +1,8 @@
-from .train_step import TrainState, cross_entropy, init_train_state, make_train_step
+from .train_step import (TrainState, cross_entropy, init_train_state,
+                         make_train_step, state_template,
+                         state_template_on_device)
 from .trainer import RunReport, SpotTrainer, TrainJob
 
 __all__ = ["RunReport", "SpotTrainer", "TrainJob", "TrainState",
-           "cross_entropy", "init_train_state", "make_train_step"]
+           "cross_entropy", "init_train_state", "make_train_step",
+           "state_template", "state_template_on_device"]

@@ -24,7 +24,9 @@ Two time modes:
 
 from __future__ import annotations
 
+import logging
 import math
+from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
 from typing import Any, Callable
 
@@ -38,7 +40,10 @@ from ..core.spot_sim import InstancePool
 from ..data import PipelineState, TokenPipeline
 from ..models.config import ModelConfig
 from ..optim import AdamWConfig
-from .train_step import init_train_state, make_train_step, state_template
+from .train_step import (init_train_state, make_train_step, state_template,
+                         state_template_on_device)
+
+log = logging.getLogger("spoton")
 
 
 @dataclass
@@ -95,11 +100,67 @@ class SpotTrainer:
             else np.dtype("float32"))
         self._step_fn = jax.jit(make_train_step(
             cfg, job.opt, remat=job.remat, microbatches=job.microbatches))
+        self._compiled_step = None    # AOT-compiled step (resume warm start)
 
     # -----------------------------------------------------------------------
 
     def _fresh_state(self):
         return init_train_state(self.job.cfg, self.job.opt, seed=self.job.seed)
+
+    # -- fast resume --------------------------------------------------------
+
+    def _compile_step(self, template):
+        """AOT-compile the train step from abstract shapes — no state needed,
+        so it can run while the checkpoint restore is still on disk. With a
+        persistent XLA compilation cache this is a disk hit on every
+        instance after the first."""
+        state_sds = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(np.shape(x), x.dtype)
+            if hasattr(x, "shape") else x, template)
+        batch_sds = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+            self.pipeline.batch_at(0))
+        return self._step_fn.lower(state_sds, batch_sds).compile()
+
+    def resume(self, template):
+        """Eviction→first-step-back warm start.
+
+        The MTTR window decomposes into restore + H2D + recompile + data
+        seek; this overlaps them: step compilation runs on a side thread
+        (abstract shapes only) while the streaming restore decodes the
+        latest checkpoint straight onto the device, and the data pipeline
+        fast-forwards to the restored cursor in O(1). Returns
+        (state, manifest, step, pipeline_state) or None when no checkpoint
+        exists (cold start — the compile still warms the session).
+        """
+        # an executable surviving from the previous session (same process)
+        # is already warm; only the replacement-instance case pays a
+        # compile, and it overlaps the restore below
+        compile_ex = cfut = None
+        if self._compiled_step is None:
+            compile_ex = ThreadPoolExecutor(1,
+                                            thread_name_prefix="spoton-compile")
+            cfut = compile_ex.submit(self._compile_step, template)
+        try:
+            restored = self.coord.restore_latest(
+                state_template_on_device(template))
+            if cfut is not None:
+                try:
+                    self._compiled_step = cfut.result()
+                except Exception as e:  # AOT is an optimization, never fatal:
+                    log.warning("step precompile failed; jit will compile at "
+                                "first dispatch: %s", e)
+                    self._compiled_step = None
+        finally:
+            if compile_ex is not None:
+                compile_ex.shutdown(wait=False)
+        if restored is None:
+            return None
+        state, man = restored
+        step = int(np.asarray(state["step"]))
+        pstate = self.pipeline.fast_forward(
+            int(np.asarray(state["data"]["next_batch_index"])))
+        return state, man, step, pstate
 
     def run(self) -> RunReport:
         job = self.job
@@ -121,14 +182,14 @@ class SpotTrainer:
             sessions += 1
             inst = self.pool.wait_for_instance()
             self.coord.attach_instance(inst.metadata, inst.name)
-            restored = self.coord.restore_latest(template)
-            if restored is not None:
-                state, _man = restored
-                step = int(np.asarray(state["step"]))
+            resumed = self.resume(template)
+            if resumed is not None:
+                state, _man, step, pstate = resumed
             else:
                 state = self._fresh_state()
                 step = 0
                 cold_starts += 1
+                pstate = self.pipeline.fast_forward(0)
             # work executed beyond this restore point is lost
             if last_session_max_step > step:
                 lost_steps += last_session_max_step - step
@@ -141,11 +202,17 @@ class SpotTrainer:
             while step < job.total_steps:
                 if self.pool.tick() is None:       # platform killed the VM
                     break
-                batch = self.pipeline.batch_at(
-                    int(np.asarray(state["data"]["next_batch_index"])))
+                # the host-side cursor mirrors state["data"]["next_batch_index"]
+                # (both advance by 1 per step; resume() re-syncs from the
+                # restored state) — reading it here instead of the device
+                # cursor saves a device→host sync per step
+                batch = self.pipeline.batch_at(pstate.next_batch_index)
                 t0 = clock.now()
-                state, metrics = self._step_fn(state, batch)
+                step_fn = (self._compiled_step if self._compiled_step is not None
+                           else self._step_fn)
+                state, metrics = step_fn(state, batch)
                 jax.block_until_ready(metrics["loss"])
+                pstate = PipelineState(pstate.next_batch_index + 1)
                 self.ledger.charge_step(self.step_time_s)
                 dur = clock.now() - t0
                 step += 1
@@ -211,6 +278,8 @@ class SpotTrainer:
                 "stage_ckpts": st.stage_ckpts,
                 "ckpt_bytes_written": st.ckpt_bytes_written,
                 "ckpt_time_s": st.ckpt_time_s,
+                "mttr_mean_s": st.mttr_mean_s,
+                "mttr_samples": list(st.mttr_samples),
             },
             extra={"provider": self.coord.provider.name},
         )

@@ -1,0 +1,279 @@
+"""Fast-resume pipeline: streaming-vs-serial restore bit-identity (v1+v2
+manifests, host+device templates), Pallas-vs-host dequant parity, data
+fast-forward determinism, MTTR ledger accounting, warm-start trainer resume."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+import ml_dtypes
+
+from repro.checkpoint import CheckpointStore
+from repro.checkpoint import serialize as ser
+from repro.core import (CheckpointPolicy, SpotOnCoordinator, TimeModel,
+                        VirtualClock)
+from repro.data import PipelineState, TokenPipeline
+from repro.kernels.quantize import (dequantize_int8, dequantize_int8_many,
+                                    dequantize_int8_ref)
+
+
+def mixed_state(step=3):
+    rng = np.random.default_rng(step)
+    return {
+        "params": {"big": rng.standard_normal((128, 1024)).astype(np.float32),
+                   "bf16": rng.standard_normal((64, 32)).astype(ml_dtypes.bfloat16),
+                   "ints": np.arange(4000, dtype=np.int32),
+                   "tiny": np.float32(2.5)},
+        "opt": {"mu": {"big": rng.standard_normal((128, 1024)).astype(np.float32)},
+                "nu": {"big": np.abs(rng.standard_normal((128, 1024))).astype(np.float32)}},
+        "step": step,
+    }
+
+
+def host_template(state):
+    return jax.tree.map(
+        lambda x: np.zeros(np.shape(x), x.dtype) if hasattr(x, "dtype") else x,
+        state)
+
+
+def device_template(state):
+    sharding = jax.sharding.SingleDeviceSharding(jax.devices()[0])
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(np.shape(x), x.dtype, sharding=sharding)
+        if hasattr(x, "dtype") else x, state)
+
+
+def assert_tree_equal(a, b):
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        x, y = np.asarray(x), np.asarray(y)
+        assert x.dtype == y.dtype
+        np.testing.assert_array_equal(x, y)
+
+
+class TestStreamingRestoreBitIdentity:
+    @pytest.mark.parametrize("mode", ["delta", "full"])
+    @pytest.mark.parametrize("compress", [False, True])
+    def test_streaming_matches_serial(self, tmp_path, mode, compress):
+        """Streaming restore (host and device templates) is bit-identical to
+        the serial path for both manifest formats, quantized moments and
+        compressed integer payloads included."""
+        store = CheckpointStore(str(tmp_path), mode=mode, compress=compress,
+                                quantize_moments=True, chunk_size=64 * 1024)
+        s = mixed_state(5)
+        store.save(5, s)
+        serial, man = store.restore(host_template(s))
+        assert man.step == 5
+        stream_host, _ = store.restore(host_template(s), streaming=True)
+        stream_dev, _ = store.restore(device_template(s), streaming=True)
+        assert_tree_equal(serial, stream_host)
+        assert_tree_equal(serial, stream_dev)
+        # device template actually landed arrays on device
+        assert isinstance(stream_dev["params"]["big"], jax.Array)
+        assert isinstance(stream_dev["opt"]["mu"]["big"], jax.Array)
+
+    def test_streaming_many_tiny_leaves_batch(self, tmp_path):
+        """Sub-4KiB leaves (batched into one decode task) restore exactly."""
+        s = {"scalars": {f"s{i:02d}": np.float32(i) * np.ones(3, np.float32)
+                         for i in range(32)},
+             "big": np.random.default_rng(0).standard_normal((256, 256))
+             .astype(np.float32)}
+        store = CheckpointStore(str(tmp_path))
+        store.save(1, s)
+        serial, _ = store.restore(host_template(s))
+        stream, _ = store.restore(device_template(s), streaming=True)
+        assert_tree_equal(serial, stream)
+
+    def test_streaming_zero_copy_payload_is_immutable_safe(self, tmp_path):
+        """Zero-copy mmap payloads must not alias restored *host* results in
+        a way that lets one restore see another's buffers: two restores of
+        the same checkpoint return independent-valued trees."""
+        s = mixed_state(2)
+        store = CheckpointStore(str(tmp_path))
+        store.save(2, s)
+        a, _ = store.restore(device_template(s), streaming=True)
+        b, _ = store.restore(device_template(s), streaming=True)
+        assert_tree_equal(a, b)
+
+
+class TestLegacyPoolValidation:
+    def test_legacy_chunk_flips_pool_to_crc_first_and_modern_still_reads(
+            self, tmp_path):
+        """First blake2b-era chunk flips the pool to crc-first validation
+        (one double-digest total, not per chunk); modern sha1 chunks keep
+        validating after the flip, and corruption is still caught."""
+        import hashlib
+        import zlib
+        from repro.checkpoint import ChunkRef
+        from repro.checkpoint import chunkstore
+
+        pool = chunkstore.ChunkPool(str(tmp_path / "chunks"))
+        legacy = np.arange(500, dtype=np.float32).tobytes()
+        lh = hashlib.blake2b(legacy, digest_size=20).hexdigest()
+        pool.write(lh, legacy)
+        modern = np.arange(300, dtype=np.float32).tobytes()
+        mh = chunkstore.chunk_digest(modern)
+        pool.write(mh, modern)
+        lref = ChunkRef(hash=lh, nbytes=len(legacy), raw_len=len(legacy),
+                        crc32=zlib.crc32(legacy), comp="raw")
+        mref = ChunkRef(hash=mh, nbytes=len(modern), raw_len=len(modern),
+                        crc32=zlib.crc32(modern), comp="raw")
+        assert not pool.legacy_validate
+        assert pool.read(lref) == legacy
+        assert pool.legacy_validate          # flipped on the fallback hit
+        assert pool.read(mref) == modern     # modern chunks unaffected
+        bad = ChunkRef(hash=mh, nbytes=len(modern), raw_len=len(modern),
+                       crc32=mref.crc32 ^ 0xFF, comp="raw")
+        with pytest.raises(IOError):
+            pool.read(bad)                   # corruption still caught
+
+
+class TestDequantKernelParity:
+    @pytest.mark.parametrize("shape,dtype", [
+        ((257, 33), np.float32), ((512,), np.float32),
+        ((16, 8, 4), "bfloat16"), ((1,), np.float32)])
+    def test_kernel_matches_host_dequant(self, shape, dtype):
+        """Interpret-mode Pallas dequant == host finish_payload == jnp ref —
+        the streaming restore's bit-identity contract."""
+        if dtype == "bfloat16":
+            dtype = ml_dtypes.bfloat16
+        x = np.random.default_rng(1).standard_normal(shape).astype(dtype)
+        q, scale = ser.quantize(x, "int8")
+        host = ser.finish_payload(q.copy(), dtype_name=np.dtype(dtype).name,
+                                  quant="int8", scale=float(scale))
+        dev = dequantize_int8(jnp.asarray(q), scale, dtype=dtype,
+                              interpret=True)
+        ref = dequantize_int8_ref(jnp.asarray(q), scale, dtype=dtype)
+        assert host.dtype == np.asarray(dev).dtype == np.asarray(ref).dtype
+        np.testing.assert_array_equal(host, np.asarray(dev))
+        np.testing.assert_array_equal(host, np.asarray(ref))
+
+    def test_batched_dequant_matches_per_tensor(self):
+        rng = np.random.default_rng(2)
+        xs = [rng.standard_normal((64, 64)).astype(np.float32),
+              rng.standard_normal((33,)).astype(ml_dtypes.bfloat16)]
+        qs, scales, dtypes = [], [], []
+        for x in xs:
+            q, s = ser.quantize(x, "int8")
+            qs.append(q); scales.append(s); dtypes.append(np.dtype(x.dtype).name)
+        outs = dequantize_int8_many(qs, scales, dtypes)
+        for x, q, s, d, o in zip(xs, qs, scales, dtypes, outs):
+            host = ser.finish_payload(q.copy(), dtype_name=d, quant="int8",
+                                      scale=s)
+            assert np.asarray(o).dtype == host.dtype
+            np.testing.assert_array_equal(np.asarray(o), host)
+
+    def test_host_dequant_float32_single_allocation_path(self):
+        """The float32 fast path (multiply straight into the target dtype)
+        is exact vs the generic two-step sequence."""
+        q = np.random.default_rng(3).integers(-127, 128, 4096).astype(np.int8)
+        scale = 0.0123
+        fast = ser.finish_payload(q.copy(), dtype_name="float32",
+                                  quant="int8", scale=scale)
+        slow = (q.astype(np.float32) * np.float32(scale)).astype(np.float32)
+        assert fast.dtype == np.float32
+        np.testing.assert_array_equal(fast, slow)
+
+
+class TestDataFastForward:
+    def test_fast_forward_matches_uninterrupted_run(self):
+        pipe = TokenPipeline(vocab_size=128, batch=2, seq_len=8, seed=3)
+        st = PipelineState()
+        batches = []
+        for _ in range(10):
+            b, st = pipe.next(st)
+            batches.append(b)
+        st2 = pipe.fast_forward(4)
+        assert st2.next_batch_index == 4
+        for i in range(4, 10):
+            b2, st2 = pipe.next(st2)
+            np.testing.assert_array_equal(b2["inputs"], batches[i]["inputs"])
+            np.testing.assert_array_equal(b2["labels"], batches[i]["labels"])
+
+    def test_fast_forward_rejects_negative(self):
+        pipe = TokenPipeline(vocab_size=16, batch=1, seq_len=4)
+        with pytest.raises(ValueError):
+            pipe.fast_forward(-1)
+
+
+class TestMttrAccounting:
+    def _coord(self, tmp_path, clock):
+        store = CheckpointStore(str(tmp_path), time_fn=clock.now)
+        policy = CheckpointPolicy.transparent(1e9)  # no periodic noise
+        return SpotOnCoordinator(store, policy, clock,
+                                 time_model=TimeModel()), store
+
+    def test_mttr_window_measured_from_detach_to_first_step(self, tmp_path):
+        clock = VirtualClock()
+        coord, store = self._coord(tmp_path, clock)
+        s = mixed_state(3)
+        store.save(3, s)
+        coord.detach()                       # eviction at t0
+        t0 = clock.now()
+        clock.advance(50.0)                  # provisioning delay
+        restored = coord.restore_latest(host_template(s))
+        assert restored is not None
+        _state, man = restored
+        nbytes = sum(t["nbytes"] for t in man.tensors)
+        assert clock.now() == pytest.approx(
+            t0 + 50.0 + coord.ledger.read_s(nbytes))
+        clock.advance(2.0)                   # the first step back
+        coord.on_step_end(4, lambda: s)
+        expected = 50.0 + coord.ledger.read_s(nbytes) + 2.0
+        assert coord.stats.mttr_samples == [pytest.approx(expected)]
+        assert coord.stats.mttr_mean_s == pytest.approx(expected)
+        assert coord.ledger.observed["mttr"] == [pytest.approx(expected)]
+        assert coord.ledger.observed_total("mttr") == pytest.approx(expected)
+        # the window is consumed: the next step adds no sample
+        coord.on_step_end(5, lambda: s)
+        assert len(coord.stats.mttr_samples) == 1
+
+    def test_no_mttr_sample_without_eviction(self, tmp_path):
+        clock = VirtualClock()
+        coord, store = self._coord(tmp_path, clock)
+        s = mixed_state(1)
+        store.save(1, s)
+        coord.restore_latest(host_template(s))
+        coord.on_step_end(2, lambda: s)
+        assert coord.stats.mttr_samples == []
+        assert coord.stats.mttr_mean_s == 0.0
+
+
+class TestTrainerResume:
+    def test_resume_overlaps_compile_and_restores_state(self, tmp_path):
+        """SpotTrainer.resume: restores the latest checkpoint, fast-forwards
+        the pipeline cursor, and leaves a warm compiled step behind."""
+        from repro.configs import get_smoke_config
+        from repro.core import (CheckpointPolicy, CostAccountant, AZURE_D8S_V3,
+                                NoEviction, ScaleSet, SpotOnCoordinator,
+                                WallClock)
+        from repro.optim import AdamWConfig
+        from repro.train import SpotTrainer, TrainJob
+        from repro.train.train_step import state_template
+
+        clock = WallClock()
+        pool = ScaleSet(clock=clock, schedule=NoEviction(),
+                        accountant=CostAccountant(AZURE_D8S_V3),
+                        provisioning_delay_s=0.0)
+        store = CheckpointStore(str(tmp_path))
+        coord = SpotOnCoordinator(store, CheckpointPolicy.transparent(1e9),
+                                  clock)
+        cfg = get_smoke_config("gemma3-1b")
+        job = TrainJob(cfg=cfg, opt=AdamWConfig(total_steps=4), total_steps=4,
+                       n_stages=1, batch=2, seq_len=8)
+        trainer = SpotTrainer(job, coord, pool, clock)
+        state0 = trainer._fresh_state()
+        template = state_template(state0)
+        assert trainer.resume(template) is None          # no checkpoint yet
+        assert trainer._compiled_step is not None        # compile still warm
+        # run one real step with the compiled fn, checkpoint it, resume
+        batch = trainer.pipeline.batch_at(0)
+        state1, _metrics = trainer._compiled_step(state0, batch)
+        store.save(1, state1)
+        resumed = trainer.resume(template)
+        assert resumed is not None
+        state, _man, step, pstate = resumed
+        assert step == 1 and pstate.next_batch_index == 1
+        assert_tree_equal(state, state1)
