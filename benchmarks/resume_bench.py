@@ -98,6 +98,80 @@ def bench_restore_to_device() -> dict:
     return results
 
 
+def bench_contended_restore() -> dict:
+    """Contended MTTR leg: restore throughput while a concurrent writer
+    saves against the *same* store (ROADMAP "MTTR under load") — after an
+    eviction the surviving fleet members keep checkpointing into the shared
+    volume, so the replacement's restore competes for the 9p/NFS executor.
+    Reports best-of-N restore GB/s under load next to the idle figure the
+    main leg measures; the gap is the contention tax."""
+    import threading
+
+    import jax
+    import numpy as np
+
+    from repro.checkpoint import CheckpointStore, DeviceDeltaTracker
+    from repro.train import state_template_on_device
+
+    state = fixture_state()
+    nbytes = sum(a.nbytes for a in jax.tree.leaves(state)
+                 if hasattr(a, "nbytes"))
+    dev_tpl = state_template_on_device(state)
+    results: dict = {}
+    with tempfile.TemporaryDirectory() as td:
+        # retention high enough that the writer's steps never gc the
+        # restored step out from under the bench
+        store = CheckpointStore(td, compress=False, quantize_moments=True,
+                                retention=100)
+        store.save(7, state)
+
+        # writer: periodic low-churn delta saves through the device-delta
+        # tracker — the steady-state save shape the fleet actually runs
+        writer_state = {
+            "params": {k: np.asarray(v) + 1.0
+                       for k, v in state["params"].items()},
+            "step": 100}
+        tracker = DeviceDeltaTracker(store.pool, chunk_size=store.chunk_size,
+                                     compress=store.compress)
+        stop = threading.Event()
+        saved = [0]
+
+        def writer():
+            step = 100
+            import jax.numpy as jnp
+            base = {k: jnp.asarray(v)
+                    for k, v in writer_state["params"].items()}
+            while not stop.is_set():
+                step += 1
+                st = {"params": {k: v.at[:8].add(float(step))
+                                 for k, v in base.items()}, "step": step}
+                try:
+                    store.save(step, st, tracker=tracker)
+                    saved[0] += 1
+                except OSError:
+                    break
+
+        t = threading.Thread(target=writer, daemon=True)
+        t.start()
+        try:
+            dts = []
+            for _ in range(REPS):
+                t0 = time.perf_counter()
+                got, _ = store.restore(dev_tpl, step=7, streaming=True)
+                jax.block_until_ready(got)
+                dts.append(time.perf_counter() - t0)
+        finally:
+            stop.set()
+            t.join(timeout=30)
+        best = min(dts)
+        results["contended_streaming_restore_GBps"] = round(
+            nbytes / best / 1e9, 3)
+        results["contended_writer_saves"] = saved[0]
+        print(f"contended_streaming_restore,{best*1e6:.0f}us,"
+              f"{nbytes/best/1e9:.2f}_GBps,writer_saves={saved[0]}")
+    return results
+
+
 def bench_mttr() -> dict:
     from .common import run_row
 
@@ -121,6 +195,7 @@ def bench_mttr() -> dict:
 
 def main() -> dict:
     results = bench_restore_to_device()
+    results.update(bench_contended_restore())
     results.update(bench_mttr())
     path = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..",
                         BENCH_JSON)

@@ -167,7 +167,7 @@ def main() -> None:
     if "delta" in want:
         section("delta: incremental vs full checkpoint sweep by churn rate")
         from . import delta_sweep
-        delta_sweep.main()
+        record_trajectory("delta", delta_sweep.main())
     if "micro" in want:
         section("micro: checkpoint path throughput")
         micro()

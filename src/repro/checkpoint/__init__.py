@@ -4,13 +4,14 @@ See DESIGN.md §3."""
 
 from .async_ckpt import AsyncCheckpointer
 from .chunkstore import ChunkPool, ChunkRef, DeltaIndex
+from .device_delta import DeltaBlocks, DeviceDeltaTracker
 from .sharded import (CheckpointReader, Snapshot, extract_snapshot, prestage,
                       restore_to_template, restore_to_template_streaming)
 from .store import CheckpointInfo, CheckpointStore
 
 __all__ = [
     "AsyncCheckpointer", "CheckpointInfo", "CheckpointReader", "CheckpointStore",
-    "ChunkPool", "ChunkRef", "DeltaIndex",
+    "ChunkPool", "ChunkRef", "DeltaBlocks", "DeltaIndex", "DeviceDeltaTracker",
     "Snapshot", "extract_snapshot", "prestage", "restore_to_template",
     "restore_to_template_streaming",
 ]

@@ -88,10 +88,18 @@ class AsyncCheckpointer:
     # -- API -------------------------------------------------------------------
 
     def save_async(self, step: int, state, *, kind: str = "transparent",
-                   mesh_info: dict | None = None, extra: dict | None = None) -> sharded.Snapshot:
-        """Snapshot now (blocking, cheap), write in background (backpressured)."""
+                   mesh_info: dict | None = None, extra: dict | None = None,
+                   tracker=None) -> sharded.Snapshot:
+        """Snapshot now (blocking, cheap), write in background (backpressured).
+
+        With a ``tracker`` (device-delta, delta-mode stores) the extract leg
+        moves only fingerprint-dirty blocks device→host; the tracker's
+        commit bookkeeping runs on this writer thread once the store marks
+        the checkpoint COMMITTED."""
         self._raise_pending_error()
-        snap = sharded.extract_snapshot(state, step=step, mesh_info=mesh_info)
+        snap = sharded.extract_snapshot(
+            state, step=step, mesh_info=mesh_info,
+            tracker=tracker if self.store.mode == "delta" else None)
         job = _Job(snapshot=snap, kind=kind, extra=extra, done=threading.Event())
         self._queue.put(job)  # blocks if max_pending writes are outstanding
         return snap
@@ -109,6 +117,11 @@ class AsyncCheckpointer:
         notice window moves them at 1/4 width; the stored bytes are the same
         as a host-side quantize, so the chunks still dedup against periodic
         saves of the same state.
+
+        Urgent saves never use the device-delta fingerprint path: the notice
+        window cannot wait for a digest round-trip at a step boundary, and
+        the delta-mode chunk pool already makes the *write* leg incremental
+        via the raw-digest memo.
         """
         snap = sharded.extract_snapshot(
             state, step=step, mesh_info=mesh_info,

@@ -319,23 +319,38 @@ def store_payload_chunks(
             pool.touch(memo.ref.hash)
             refs.append(memo.ref)
             continue
-        enc = ser.compress_bytes(raw_chunk, comp)
-        k = comp or "raw"
-        if comp and len(enc) >= len(raw_chunk):
-            enc, k = raw_chunk, "raw"         # compression didn't pay here
-        # stored-raw chunks share the raw digest — don't hash 2x
-        h = rd if enc is raw_chunk else chunk_digest(enc)
-        pin(h)
-        n = pool.write(h, enc, sync_dir=dirty_dirs is None)
-        if n and dirty_dirs is not None:
-            dirty_dirs.add(os.path.dirname(pool.path(h)))
+        ref, n, _rd = store_chunk(pool, raw_chunk, comp=comp, pin=pin,
+                                  dirty_dirs=dirty_dirs, raw_digest=rd)
         written += n
-        ref = ChunkRef(hash=h, nbytes=len(enc), raw_len=len(raw_chunk),
-                       crc32=zlib.crc32(enc), comp=k)
         if index is not None:
             index.put((key, ci), rd, codec, ref)
         refs.append(ref)
     return refs, written
+
+
+def store_chunk(pool: ChunkPool, raw_chunk, *, comp: str,
+                pin: Callable[[str], None] = lambda h: None,
+                dirty_dirs: set | None = None,
+                raw_digest: str | None = None) -> tuple[ChunkRef, int, str]:
+    """Encode + store one raw chunk; returns (ref, bytes_written, raw sha1).
+
+    The per-chunk body of ``store_payload_chunks``, shared with the
+    device-delta write path (which brings its own skip decision — the
+    fingerprint — and only reaches here for dirty blocks)."""
+    rd = raw_digest if raw_digest is not None else chunk_digest(raw_chunk)
+    enc = ser.compress_bytes(raw_chunk, comp)
+    k = comp or "raw"
+    if comp and len(enc) >= len(raw_chunk):
+        enc, k = raw_chunk, "raw"             # compression didn't pay here
+    # stored-raw chunks share the raw digest — don't hash 2x
+    h = rd if enc is raw_chunk else chunk_digest(enc)
+    pin(h)
+    n = pool.write(h, enc, sync_dir=dirty_dirs is None)
+    if n and dirty_dirs is not None:
+        dirty_dirs.add(os.path.dirname(pool.path(h)))
+    ref = ChunkRef(hash=h, nbytes=len(enc), raw_len=len(raw_chunk),
+                   crc32=zlib.crc32(enc), comp=k)
+    return ref, n, rd
 
 
 def _heal_and_raise(path: str, ref: ChunkRef, why: str) -> None:

@@ -491,15 +491,26 @@ def default_codec_for(name: str, arr: np.ndarray, *, compress: bool,
     inside the eviction-notice window. Params and scalars stay exact.
     """
     arr = np.asarray(arr)
-    if (quantize_moments and is_moment_name(name) and is_float_dtype(arr.dtype)
-            and arr.ndim >= 1):
+    return codec_for_meta(name, arr.dtype, arr.nbytes, ndim=arr.ndim,
+                          compress=compress, quantize_moments=quantize_moments)
+
+
+def codec_for_meta(name: str, dtype, nbytes: int, *, ndim: int,
+                   compress: bool, quantize_moments: bool) -> str:
+    """``default_codec_for`` from metadata alone — the device-delta tracker
+    must know a leaf's codec *before* any bytes reach the host (the codec
+    decides whether the fingerprint path applies at all), so the policy is
+    keyed on (name, dtype, nbytes, ndim), never on array content."""
+    dtype = np.dtype(dtype)
+    if (quantize_moments and is_moment_name(name) and is_float_dtype(dtype)
+            and ndim >= 1):
         return resolve_codec("int8+zstd") if compress else "int8"
-    if compress and arr.nbytes >= 1024:
+    if compress and nbytes >= 1024:
         if HAVE_ZSTD:
             return "zstd"
         # zlib runs ~20 MB/s on float payloads for a ~7% ratio — it would
         # dominate checkpoint time for no real size win, so large float
         # tensors stay raw; integer/bool payloads still compress well
-        if arr.dtype.kind in "iub":
+        if dtype.kind in "iub":
             return "zlib"
     return "raw"

@@ -43,6 +43,7 @@ from __future__ import annotations
 
 import os
 import threading
+import time
 from concurrent.futures import wait as futures_wait
 from dataclasses import dataclass, field
 from typing import Any, Callable
@@ -53,6 +54,7 @@ import jax
 
 from . import chunkstore
 from . import serialize as ser
+from .device_delta import DeltaBlocks, DeviceDeltaTracker, write_delta_blocks_piece
 from .ioutil import fsync_dir
 
 Index = tuple[tuple[int, int], ...]
@@ -65,11 +67,13 @@ SMALL_LEAF_BYTES = 4096
 
 @dataclass
 class LeafPieces:
-    """All locally-owned pieces of one logical tensor."""
+    """All locally-owned pieces of one logical tensor. A piece payload is a
+    dense host ndarray, or a ``device_delta.DeltaBlocks`` when the
+    fingerprint path pruned the device→host copy to the dirty blocks."""
 
     global_shape: tuple[int, ...]
     dtype: str                     # logical dtype (pre-quantization)
-    pieces: list[tuple[Index, np.ndarray]]
+    pieces: list[tuple[Index, Any]]     # ndarray | DeltaBlocks
     is_scalar_py: bool = False     # python int/float leaf (restore casts back)
     py_type: str = ""
     prequant: str = ""             # "int8": pieces hold on-device-quantized data
@@ -86,6 +90,16 @@ class Snapshot:
     treedef_repr: str
     mesh: dict
     nbytes: int = 0
+    # D2H accounting (the save-path win the ledger reports): bytes that
+    # actually crossed the device→host link vs. bytes the fingerprint path
+    # proved unchanged and never transferred. stall_s is the wall time the
+    # trainer was blocked inside extract — the save's step-boundary cost.
+    d2h_bytes: int = 0
+    d2h_skipped: int = 0
+    stall_s: float = 0.0
+    # invoked by the store with the final manifest records once this
+    # snapshot's checkpoint is durably committed (device-delta bookkeeping)
+    on_committed: Callable[[list[dict]], None] | None = None
 
 
 def _slices_to_index(slices, shape) -> Index:
@@ -111,13 +125,29 @@ def _stage_async(leaf) -> None:
         pass
 
 
-def prestage(state):
+def prestage(state, tracker: DeviceDeltaTracker | None = None):
     """Start device→host copies for every array leaf and return ``state``.
 
     The trainer hands this to the coordinator as the state supplier, so the
     moment a checkpoint decision is made the DMAs are already in flight —
     by the time ``extract_snapshot`` gathers, most bytes have landed.
+
+    With a ``tracker`` (device-delta saves) the staging is double-buffered
+    differently: fingerprint-eligible leaves dispatch their per-block digest
+    + diff compute on device instead of a full-state DMA — only the dirty
+    blocks will cross later, and the digest compute overlaps whatever the
+    trainer does next (the gather of save N runs under step N+1's compute;
+    every staged result is a fresh device buffer, so donation of the state
+    into the next step can never alias it). Non-eligible leaves stage the
+    ordinary way. Urgent saves never pass a tracker.
     """
+    if tracker is not None:
+        named = ser.flatten_state(state)
+        for name, leaf in named.items():
+            if not tracker.prestage_leaf(name, leaf):
+                if isinstance(leaf, jax.Array):
+                    _stage_async(leaf)
+        return state
     for leaf in jax.tree_util.tree_leaves(state):
         if isinstance(leaf, jax.Array):
             _stage_async(leaf)
@@ -126,6 +156,7 @@ def prestage(state):
 
 def extract_snapshot(state, *, step: int, mesh_info: dict | None = None,
                      on_device_quantize: Callable[[str], bool] | None = None,
+                     tracker: DeviceDeltaTracker | None = None,
                      ) -> Snapshot:
     """Freeze `state` to host memory; returns shard pieces per leaf.
 
@@ -134,9 +165,21 @@ def extract_snapshot(state, *, step: int, mesh_info: dict | None = None,
     moment predicate, shrinking the device→host transfer 4x); (1) issue
     ``copy_to_host_async`` across every staged array so the DMAs overlap;
     (2) gather each shard into host memory — the only blocking pass.
+
+    With a ``tracker`` (periodic delta saves), leaves whose previous-save
+    fingerprints are device-resident take the dirty-block path instead:
+    digests compare on device, only changed blocks are gathered to host
+    (``DeltaBlocks`` pieces), and unchanged blocks never cross the link.
+    ``on_device_quantize`` and ``tracker`` are mutually exclusive by
+    construction — urgent saves bypass fingerprinting entirely.
     """
+    t_stall0 = time.perf_counter()
     named = ser.flatten_state(state)
     leaf_order = list(named)
+    tracked: dict[str, Any] = {}
+    commit_cb = None
+    if tracker is not None and on_device_quantize is None:
+        tracked, commit_cb = tracker.begin(named)
     prequant: dict[str, tuple[Any, Any]] = {}       # name -> (q_array, scale)
     if on_device_quantize is not None:
         from ..kernels.quantize import quantize_int8
@@ -146,12 +189,29 @@ def extract_snapshot(state, *, step: int, mesh_info: dict | None = None,
                     and on_device_quantize(name)):
                 prequant[name] = quantize_int8(leaf)
     for name, leaf in named.items():                # phase 1: async staging
+        if name in tracked:
+            tracked[name].resolve()     # diff sync + dirty-block gather
+            continue
         staged = prequant[name][0] if name in prequant else leaf
         if isinstance(staged, jax.Array):
             _stage_async(staged)
     leaves: dict[str, LeafPieces] = {}
     nbytes = 0
+    d2h_bytes = 0
+    d2h_skipped = 0
     for name, leaf in named.items():                # phase 2: gather
+        if name in tracked:
+            res = tracked[name].finish()
+            if res is not None:
+                db, leaf_d2h, leaf_skip = res
+                leaves[name] = LeafPieces(
+                    db.shape, db.dtype_name,
+                    [(tuple((0, s) for s in db.shape), db)])
+                nbytes += db.nbytes
+                d2h_bytes += leaf_d2h
+                d2h_skipped += leaf_skip
+                continue
+            # high-churn dense fallback: gathered below like any other leaf
         is_scalar_py = isinstance(leaf, (int, float, bool)) and not isinstance(leaf, np.generic)
         pq, scale = None, None
         if name in prequant:
@@ -167,11 +227,13 @@ def extract_snapshot(state, *, step: int, mesh_info: dict | None = None,
                 arr = np.asarray(shard.data)
                 pieces.append((_slices_to_index(shard.index, src.shape), arr))
                 nbytes += arr.nbytes
+                d2h_bytes += arr.nbytes
             lp = LeafPieces(tuple(src.shape), ser.dtype_to_name(leaf.dtype),
                             pieces, prequant=pq or "", scale=scale)
         else:
             arr = ser.to_host(src)
             nbytes += arr.nbytes
+            d2h_bytes += arr.nbytes
             lp = LeafPieces(
                 tuple(arr.shape), ser.dtype_to_name(leaf.dtype if pq
                                                     else arr.dtype),
@@ -182,7 +244,11 @@ def extract_snapshot(state, *, step: int, mesh_info: dict | None = None,
         leaves[name] = lp
     treedef = jax.tree_util.tree_structure(state)
     return Snapshot(step=step, leaves=leaves, leaf_order=leaf_order,
-                    treedef_repr=str(treedef), mesh=mesh_info or {}, nbytes=nbytes)
+                    treedef_repr=str(treedef), mesh=mesh_info or {},
+                    nbytes=nbytes, d2h_bytes=d2h_bytes,
+                    d2h_skipped=d2h_skipped,
+                    stall_s=time.perf_counter() - t_stall0,
+                    on_committed=commit_cb)
 
 
 def _piece_codec(name: str, lp: LeafPieces, arr: np.ndarray, *,
@@ -269,6 +335,13 @@ def write_snapshot_delta(
     dirty_dirs: set[str] = set()    # fan-out dirs with new chunks this save
     for name, lp in snapshot.leaves.items():
         for pi, (idx, arr) in enumerate(lp.pieces):
+            if isinstance(arr, DeltaBlocks):
+                # fingerprint-pruned piece: only its dirty blocks reached
+                # the host; clean blocks reuse the previous save's refs
+                fut = ex.submit(write_delta_blocks_piece, pool, (name, pi),
+                                arr, index, pin, dirty_dirs)
+                jobs.append((name, pi, idx, lp, arr, fut))
+                continue
             arr = np.asarray(arr)
             codec = _piece_codec(name, lp, arr, compress=compress,
                                  quantize_moments=quantize_moments)
@@ -295,10 +368,14 @@ def write_snapshot_delta(
     for (name, pi, idx, lp, arr, fut), res in zip(jobs, results):
         codec, scale, refs, written, raw_len = res
         new_bytes += written
+        if isinstance(arr, DeltaBlocks):
+            shape, dtype_name = arr.shape, arr.dtype_name
+        else:
+            shape = tuple(arr.shape)
+            dtype_name = lp.dtype if lp.prequant else ser.dtype_to_name(arr.dtype)
         rec = ser.TensorRecord(
-            name=f"{name}#{pi}", dtype=lp.dtype if lp.prequant
-            else ser.dtype_to_name(arr.dtype),
-            shape=tuple(arr.shape), global_shape=lp.global_shape,
+            name=f"{name}#{pi}", dtype=dtype_name,
+            shape=shape, global_shape=lp.global_shape,
             index=idx, nbytes=sum(r.nbytes for r in refs), crc32=0,
             codec=codec, scale=scale)
         d = rec.to_json()

@@ -23,6 +23,7 @@ the same ``root``. Its invariants:
 
 from __future__ import annotations
 
+import logging
 import os
 import shutil
 import threading
@@ -46,6 +47,12 @@ class CheckpointInfo:
     nbytes: int          # logical encoded size of the checkpoint
     elapsed_s: float
     new_bytes: int = 0   # bytes physically written (== nbytes for full saves)
+    # device→host accounting from the snapshot's extract: bytes that crossed
+    # the link vs. bytes the fingerprint path proved unchanged and skipped,
+    # and the wall time the trainer was stalled inside extract
+    d2h_bytes: int = 0
+    d2h_bytes_skipped: int = 0
+    save_stall_ms: float = 0.0
 
 
 class CheckpointStore:
@@ -62,6 +69,7 @@ class CheckpointStore:
         time_fn: Callable[[], float] = time.time,
         tags: dict | None = None,
         fault_injector: Callable[[str], None] | None = None,
+        chunk_sweep_interval_s: float = 60.0,
     ):
         if mode not in ("delta", "full"):
             raise ValueError(f"mode must be 'delta' or 'full', got {mode!r}")
@@ -73,6 +81,13 @@ class CheckpointStore:
         self.mode = mode
         self.chunk_size = chunk_size
         self.time_fn = time_fn
+        # opportunistic (per-save) pool sweeps are rate-limited: nothing the
+        # sweep could reclaim is younger than the age gate (hours), but the
+        # walk itself — one listdir per fan-out dir plus a manifest parse
+        # per retained step — is tens of ms of syscalls on a networked fs,
+        # paid inside every save that drops a retained step
+        self.chunk_sweep_interval_s = chunk_sweep_interval_s
+        self._last_chunk_sweep = -float("inf")
         self.pool = chunkstore.ChunkPool(os.path.join(root, chunkstore.CHUNKS_DIRNAME))
         self._delta_index = chunkstore.DeltaIndex()
         # chunk hashes referenced by saves in flight (manifest not yet
@@ -92,6 +107,10 @@ class CheckpointStore:
         # serializes the replace+mark phase across this store's writers so a
         # same-step commit race can never delete a committed checkpoint
         self._commit_lock = threading.Lock()
+        # opportunistic maintenance callbacks run after each successful
+        # commit, off the critical path (e.g. compile-cache retention gc) —
+        # failures are swallowed, a janitor must never fail a save
+        self.post_commit: list[Callable[[], None]] = []
         os.makedirs(root, exist_ok=True)
 
     # -- write ---------------------------------------------------------------
@@ -147,6 +166,7 @@ class CheckpointStore:
                 chunk_size=self.chunk_size if self.mode == "delta" else None)
             mf.write_manifest(stage, man)
             self.fault_injector("manifest_written")
+            we_committed = False
             with self._commit_lock:
                 if mf.is_committed(final):
                     # another fleet member already committed this step; the
@@ -172,6 +192,7 @@ class CheckpointStore:
                         mf.mark_committed(final)
                     finally:
                         root_sync.result()
+                    we_committed = True
         except BaseException:
             # leave staging dir for post-mortem; it is invisible to readers
             raise
@@ -179,20 +200,44 @@ class CheckpointStore:
             with self._stage_lock:
                 self._inflight_stages.discard(stage)
             self._unpin_all(pinned)
+        if we_committed and snapshot.on_committed is not None:
+            # device-delta bookkeeping: the snapshot's fingerprints + chunk
+            # refs become the next save's comparison point only now that the
+            # manifest referencing them is durably committed. Never fatal —
+            # a tracker hiccup costs the next save its delta, not the save.
+            try:
+                snapshot.on_committed(records)
+            except Exception as e:  # pragma: no cover - defensive
+                logging.getLogger("spoton").warning(
+                    "post-commit delta bookkeeping failed: %s", e)
         nbytes = sum(r["nbytes"] for r in records)
         info = CheckpointInfo(step=snapshot.step, path=final, kind=kind,
                               nbytes=nbytes, elapsed_s=self.time_fn() - t0,
-                              new_bytes=new_bytes)
+                              new_bytes=new_bytes,
+                              d2h_bytes=snapshot.d2h_bytes or snapshot.nbytes,
+                              d2h_bytes_skipped=snapshot.d2h_skipped,
+                              save_stall_ms=snapshot.stall_s * 1e3)
         # sweep_chunks=None: walk the pool only when retention actually
         # dropped a step — a full pool scan on every commit would sit inside
         # the urgent termination path for no reclaimable garbage
         self.gc(sweep_chunks=None)
+        for cb in self.post_commit:
+            try:
+                cb()
+            except Exception as e:  # pragma: no cover - defensive
+                logging.getLogger("spoton").warning(
+                    "post-commit hook failed: %s", e)
         return info
 
     def save(self, step: int, state, *, kind: str = "transparent",
-             mesh_info: dict | None = None, extra: dict | None = None) -> CheckpointInfo:
-        """Synchronous convenience: extract + write + commit."""
-        snap = sharded.extract_snapshot(state, step=step, mesh_info=mesh_info)
+             mesh_info: dict | None = None, extra: dict | None = None,
+             tracker=None) -> CheckpointInfo:
+        """Synchronous convenience: extract + write + commit. ``tracker``
+        (a ``DeviceDeltaTracker``, delta mode only) routes eligible leaves
+        through the device fingerprint path."""
+        snap = sharded.extract_snapshot(
+            state, step=step, mesh_info=mesh_info,
+            tracker=tracker if self.mode == "delta" else None)
         return self.save_snapshot(snap, kind=kind, extra=extra)
 
     # -- read ----------------------------------------------------------------
@@ -286,8 +331,10 @@ class CheckpointStore:
             except OSError:
                 pass  # already gone (or unreadable): try the sweep anyway
             shutil.rmtree(path, ignore_errors=True)
-        if sweep_chunks or (sweep_chunks is None and doomed):
+        due = time.time() - self._last_chunk_sweep >= self.chunk_sweep_interval_s
+        if sweep_chunks or (sweep_chunks is None and doomed and due):
             self._gc_chunks(stale_chunk_age_s)
+            self._last_chunk_sweep = time.time()
         return doomed
 
     def live_chunk_hashes(self) -> set[str]:

@@ -22,6 +22,14 @@ by physics. With a delta-mode store (the default) write costs are charged on
 ``CheckpointInfo.new_bytes`` — the dirty chunks actually pushed to the shared
 volume — not the logical state size; that is precisely why an urgent
 termination checkpoint fits the eviction-notice window at low churn.
+Periodic saves additionally run through the **device-delta tracker**
+(``checkpoint.device_delta``): per-block fingerprints stay device-resident
+between saves, so the extract leg moves only fingerprint-dirty blocks
+device→host — the modeled extract cost is charged on ``Snapshot.d2h_bytes``
+(the bytes that actually crossed the link), and
+``CoordinatorStats``/``TimeLedger`` record ``d2h_bytes`` /
+``d2h_bytes_skipped`` plus the extract stall so the saving is observable in
+every run report. Urgent and stage saves bypass the tracker.
 Checkpoints written through the coordinator carry ``{"provider", "instance"}``
 tags in their manifest extras, so a fleet's shared store records which cloud
 wrote each checkpoint.
@@ -44,7 +52,7 @@ from dataclasses import dataclass, field
 from typing import Any, Callable
 
 from ..checkpoint.async_ckpt import AsyncCheckpointer
-from ..checkpoint.sharded import Snapshot, extract_snapshot
+from ..checkpoint.sharded import Snapshot, extract_snapshot, prestage
 from ..checkpoint.store import CheckpointStore
 from .clock import Clock, VirtualClock
 from .ledger import TimeLedger, TimeModel  # noqa: F401  (TimeModel re-export)
@@ -107,6 +115,12 @@ class CoordinatorStats:
     ckpt_bytes_written: int = 0
     ckpt_time_s: float = 0.0
     restore_time_s: float = 0.0
+    # device→host traffic of the save path: bytes that crossed the link vs.
+    # bytes the device fingerprint path proved unchanged and never staged,
+    # and the cumulative wall time training was stalled inside extract
+    d2h_bytes: int = 0
+    d2h_bytes_skipped: int = 0
+    save_stall_s: float = 0.0
     # MTTR: eviction (detach) → first training step completed on the
     # replacement. Covers provisioning, restore, recompilation and data
     # fast-forward — the full window the fast-resume pipeline minimizes.
@@ -130,6 +144,7 @@ class SpotOnCoordinator:
         time_model: TimeModel | None = None,
         ledger: TimeLedger | None = None,
         straggler: StragglerDetector | None = None,
+        device_delta: bool = True,
     ):
         self.store = store
         self.policy = policy
@@ -140,6 +155,17 @@ class SpotOnCoordinator:
         self.straggler = straggler
         self.stats = CoordinatorStats()
         self._async = AsyncCheckpointer(store) if policy.async_writes else None
+        # device-resident delta detection for periodic saves (delta-mode
+        # stores): fingerprints live on device between saves, so unchanged
+        # blocks never cross the device→host link. Urgent/termination and
+        # application (stage) saves always bypass it.
+        self.delta_tracker = None
+        if device_delta and store.mode == "delta":
+            from ..checkpoint.device_delta import DeviceDeltaTracker
+            self.delta_tracker = DeviceDeltaTracker(
+                store.pool, chunk_size=store.chunk_size,
+                compress=store.compress,
+                quantize_moments=store.quantize_moments)
         self._metadata: Any = None
         self._instance_name: str | None = None
         self._last_periodic_at = clock.now()
@@ -184,6 +210,24 @@ class SpotOnCoordinator:
         coordinator, which owns the cadence across members)."""
         return self._save_periodic(step, state)
 
+    def _account_extract(self, snap: Snapshot | None = None, *,
+                         d2h_bytes: int = 0, d2h_skipped: int = 0,
+                         stall_s: float = 0.0) -> None:
+        """Fold one extract's device→host traffic + stall into stats and the
+        ledger's audit trail (observations/counters, never clock charges —
+        the modeled extract cost is charged separately by the save paths).
+        Pass a Snapshot, or the raw numbers (the urgent path only has a
+        CheckpointInfo)."""
+        if snap is not None:
+            d2h_bytes, d2h_skipped, stall_s = (snap.d2h_bytes,
+                                               snap.d2h_skipped, snap.stall_s)
+        self.stats.d2h_bytes += d2h_bytes
+        self.stats.d2h_bytes_skipped += d2h_skipped
+        self.stats.save_stall_s += stall_s
+        self.ledger.observe("save_stall", stall_s)
+        self.ledger.count("d2h_bytes", d2h_bytes)
+        self.ledger.count("d2h_bytes_skipped", d2h_skipped)
+
     def _drain_async_stats(self) -> None:
         """Fold finished background writes into the stats. Periodic/rebalance
         saves account their *physical* bytes here (delta saves write only
@@ -196,14 +240,23 @@ class SpotOnCoordinator:
 
     def _save_periodic(self, step: int, state, *, stat: str = "periodic") -> bool:
         t0 = self.clock.now()
+        # prestage at decision time: with the tracker, fingerprint + diff
+        # kernels dispatch now (dirty-block gather instead of full DMAs);
+        # without it, the device→host copies start before extract gathers
+        state = prestage(state, tracker=(self.delta_tracker
+                                         if self.store.mode == "delta"
+                                         else None))
         try:
             if self._async is not None:
                 snap = self._async.save_async(step, state, kind="transparent",
                                               mesh_info=self.mesh_info,
-                                              extra=self._tags())
+                                              extra=self._tags(),
+                                              tracker=self.delta_tracker)
             else:
-                snap = extract_snapshot(state, step=step,
-                                        mesh_info=self.mesh_info)
+                snap = extract_snapshot(
+                    state, step=step, mesh_info=self.mesh_info,
+                    tracker=(self.delta_tracker
+                             if self.store.mode == "delta" else None))
                 info = self.store.save_snapshot(snap, kind="transparent",
                                                 extra=self._tags())
                 self.stats.ckpt_bytes_written += info.new_bytes
@@ -215,11 +268,14 @@ class SpotOnCoordinator:
             self.stats.periodic_failures += 1
             self._last_periodic_at = self.clock.now()
             return False
-        # async: trainer pays only the device->host extract; write overlaps.
-        # sync delta: the write leg moves only dirty chunks (info.new_bytes).
-        cost = (self.ledger.extract_s(snap.nbytes) if self._async is not None
-                else self.ledger.extract_s(snap.nbytes)
-                + self.ledger.write_s(info.new_bytes))
+        self._account_extract(snap)
+        # the extract leg is charged on the bytes that actually crossed the
+        # link (the fingerprint path makes this ≪ state size at low churn);
+        # only the write leg is conditional — async overlaps it with
+        # training, sync pays it for the dirty chunks (info.new_bytes)
+        cost = self.ledger.extract_s(snap.d2h_bytes) + (
+            0.0 if self._async is not None
+            else self.ledger.write_s(info.new_bytes))
         self.ledger.charge(cost, category="ckpt")
         if stat == "rebalance":
             self.stats.rebalance_ckpts += 1
@@ -236,26 +292,33 @@ class SpotOnCoordinator:
         if budget <= 0:
             self.stats.termination_failures += 1
             return False
+        # urgent saves bypass the device-delta tracker entirely — the notice
+        # window cannot pay digest kernels whose results extract would then
+        # discard — so the prestage is the plain full-state DMA kick
+        state = prestage(state)
         try:
             if self._async is not None:
                 info = self._async.save_urgent(step, state, mesh_info=self.mesh_info,
                                                extra=self._tags(),
                                                timeout_s=max(budget, 0.1))
-                nbytes = info.nbytes
             else:
                 snap = extract_snapshot(state, step=step, mesh_info=self.mesh_info)
                 info = self.store.save_snapshot(snap, kind="termination",
                                                 extra=self._tags())
-                nbytes = snap.nbytes
         except (TimeoutError, RuntimeError, OSError) as e:
             log.warning("termination checkpoint failed: %s", e)
             self.stats.termination_failures += 1
             return False
-        # extract covers the full state; the write leg is only the chunks the
-        # urgent save actually pushed — unchanged chunks of the last snapshot
-        # are reused from the pool, which is what keeps the notice-window
-        # write minimal under delta mode
-        cost = self.ledger.extract_s(nbytes) + self.ledger.write_s(info.new_bytes)
+        self._account_extract(d2h_bytes=info.d2h_bytes,
+                              d2h_skipped=info.d2h_bytes_skipped,
+                              stall_s=info.save_stall_ms / 1e3)
+        # extract covers the bytes that crossed the device→host link (the
+        # full state for urgent saves — at 1/4 width for on-device-quantized
+        # moments); the write leg is only the chunks the urgent save
+        # actually pushed — unchanged chunks of the last snapshot are reused
+        # from the pool, which is what keeps the notice-window write minimal
+        # under delta mode
+        cost = self.ledger.extract_s(info.d2h_bytes) + self.ledger.write_s(info.new_bytes)
         if self.ledger.time_model is not None and cost > budget:
             # virtual-time world: the write would not have finished in time
             self.ledger.charge(budget, category="ckpt")
@@ -275,6 +338,7 @@ class SpotOnCoordinator:
         snap = extract_snapshot(state, step=step, mesh_info=self.mesh_info)
         info = self.store.save_snapshot(snap, kind="application",
                                         extra=self._tags(stage=stage))
+        self._account_extract(snap)
         # app-specific saves are synchronous in the app's critical path; the
         # write leg is physical bytes so the APPLICATION-vs-TRANSPARENT
         # comparison stays symmetric under a delta-mode store

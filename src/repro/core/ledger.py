@@ -52,6 +52,7 @@ class TimeLedger:
     time_model: TimeModel | None = None
     charged: dict[str, float] = field(default_factory=dict)
     observed: dict[str, list[float]] = field(default_factory=dict)
+    counted: dict[str, int] = field(default_factory=dict)
 
     @property
     def virtual(self) -> bool:
@@ -98,6 +99,19 @@ class TimeLedger:
 
     def observed_total(self, category: str) -> float:
         return sum(self.observed.get(category, ()))
+
+    # -- counters -------------------------------------------------------------
+
+    def count(self, category: str, amount: int) -> None:
+        """Accumulate a unitless quantity (bytes moved, bytes skipped) in the
+        audit trail. Counters never touch the clock — they exist so the
+        save path's device→host traffic (``d2h_bytes`` vs
+        ``d2h_bytes_skipped``) is visible in the same ledger that accounts
+        its time."""
+        self.counted[category] = self.counted.get(category, 0) + int(amount)
+
+    def counted_total(self, category: str) -> int:
+        return self.counted.get(category, 0)
 
     def total(self, category: str | None = None) -> float:
         if category is not None:

@@ -1,0 +1,9 @@
+from .fingerprint import fingerprint_blocks_2d
+from .ops import (fingerprint_blocks, fingerprint_blocks_ref,
+                  fingerprint_diff, supported_dtype)
+from .ref import fmix32, mix_words, n_blocks_of, word_bytes, words_per_block
+
+__all__ = ["fingerprint_blocks", "fingerprint_blocks_2d",
+           "fingerprint_blocks_ref", "fingerprint_diff", "fmix32",
+           "mix_words", "n_blocks_of", "supported_dtype", "word_bytes",
+           "words_per_block"]

@@ -1,0 +1,56 @@
+"""Pallas TPU per-block fingerprint kernel.
+
+Grid = one program per block: each step loads one (rows, 128) uint32 window
+of the word stream into VMEM, mixes every word with its position, reduces to
+a single uint32 sum and writes the finalized digest to its slot of the
+(n_blocks, 1) SMEM output — the save path keeps that small array device-
+resident and compares it against the previous save's without any transfer.
+
+The arithmetic is ``ref.mix_words``/``ref.fmix32`` verbatim (integer xor,
+multiply, logical shift on uint32 — all wrap mod 2^32 identically on VPU,
+XLA and numpy), which is what the interpret-mode parity tests pin down.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .. import compat
+from .ref import fmix32, mix_words
+
+LANES = 128
+# one block's words must fit VMEM: 8192 rows x 128 lanes x 4 B = 4 MiB,
+# which covers a 1 MiB chunk of int8 (the widest word expansion)
+MAX_BLOCK_ROWS = 8192
+
+
+def _fingerprint_kernel(w_ref, out_ref):
+    rows, lanes = w_ref.shape
+    r = jax.lax.broadcasted_iota(jnp.uint32, (rows, lanes), 0)
+    c = jax.lax.broadcasted_iota(jnp.uint32, (rows, lanes), 1)
+    pos = r * jnp.uint32(lanes) + c
+    h = mix_words(w_ref[...], pos)
+    out_ref[0, 0] = fmix32(jnp.sum(h, dtype=jnp.uint32))
+
+
+def fingerprint_blocks_2d(w2d, *, rows_per_block: int, interpret=False):
+    """(n_blocks * rows_per_block, LANES) uint32 words -> (n_blocks, 1)
+    uint32 digests. Rows of one block are contiguous."""
+    total_rows, cols = w2d.shape
+    assert cols == LANES and total_rows % rows_per_block == 0, (
+        w2d.shape, rows_per_block)
+    n_blocks = total_rows // rows_per_block
+    return pl.pallas_call(
+        _fingerprint_kernel,
+        grid=(n_blocks,),
+        in_specs=[pl.BlockSpec((rows_per_block, cols), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, 1), lambda i: (i, 0),
+                               memory_space=pltpu.SMEM),
+        out_shape=jax.ShapeDtypeStruct((n_blocks, 1), jnp.uint32),
+        compiler_params=compat.tpu_compiler_params(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(w2d)

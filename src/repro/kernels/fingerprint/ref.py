@@ -1,0 +1,93 @@
+"""Numpy reference for the per-block fingerprint digest.
+
+One uint32 digest per ``block_bytes``-sized window of a tensor's raw bytes —
+the device-resident change detector of the delta save path. The mixer is a
+murmur-style integer fold chosen to be *identically computable* three ways
+(vectorized numpy on host, jitted jnp, the Pallas TPU kernel), because the
+save path compares digests produced on device across saves and the tests
+compare all three implementations bit-for-bit:
+
+    word_i  = i-th native-width word of the block, zero-extended to uint32
+              (4-byte dtypes bitcast whole; 2-/1-byte dtypes widen per word;
+              8-byte dtypes split into two uint32 words — always exactly the
+              block's raw little-endian bytes)
+    h_i     = ((word_i ^ (i * C1)) * C2) ; h_i ^= h_i >> 15
+    digest  = fmix32( sum_i h_i  mod 2^32 )
+
+Position is folded in via ``i * C1`` so word swaps change the digest; the
+xorshift after the multiply breaks the linearity that would let paired
+deltas cancel in the sum; ``fmix32`` is murmur3's finalizer. The digest is
+32 bits per block: it decides which blocks *skip* the device→host copy, it
+is NOT the content address — transferred blocks still get the pool's sha1
+(see chunkstore). A collision (2^-32 per changed block) costs a stale block
+in one checkpoint, the same failure class as any digest-based delta scheme;
+blocks are additionally guarded by shape/dtype/codec identity checks.
+
+All three implementations use python-int constants on uint32 arrays: numpy,
+jnp and Pallas all keep uint32 and wrap mod 2^32, so the bytes agree.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+# np.uint32 scalars, not python ints: jnp refuses weak int literals above
+# int32 range, while a typed uint32 scalar mixes into numpy, jnp and Pallas
+# uint32 arrays identically (wrapping mod 2^32)
+C1 = np.uint32(0x9E3779B1)       # golden-ratio odd constant (position mix)
+C2 = np.uint32(0x85EBCA6B)       # murmur3 fmix multiplier (word mix)
+_F1 = np.uint32(0x85EBCA6B)
+_F2 = np.uint32(0xC2B2AE35)
+
+
+def fmix32(h):
+    """murmur3 finalizer; works on numpy and jnp uint32 arrays alike."""
+    h = h ^ (h >> 16)
+    h = h * _F1
+    h = h ^ (h >> 13)
+    h = h * _F2
+    h = h ^ (h >> 16)
+    return h
+
+
+def mix_words(w, pos):
+    """Per-word mix (uint32 arrays in, uint32 out); shared with the jnp
+    oracle and the Pallas kernel so the arithmetic cannot drift."""
+    h = (w ^ (pos * C1)) * C2
+    return h ^ (h >> 15)
+
+
+def word_bytes(itemsize: int) -> int:
+    """Width of one digest word for a dtype: ≤4-byte dtypes hash one word
+    per element; 8-byte dtypes split each element into two uint32 words."""
+    return min(int(itemsize), 4)
+
+
+def words_per_block(block_bytes: int, itemsize: int) -> int:
+    return block_bytes // word_bytes(itemsize)
+
+
+def n_blocks_of(nbytes: int, block_bytes: int) -> int:
+    return -(-int(nbytes) // int(block_bytes))
+
+
+def fingerprint_blocks_ref(arr: np.ndarray, block_bytes: int) -> np.ndarray:
+    """uint32[n_blocks] digest of ``arr``'s raw bytes, one per block."""
+    a = np.ascontiguousarray(arr)
+    it = a.dtype.itemsize
+    if block_bytes % 4 or block_bytes < 4:
+        raise ValueError(f"block_bytes must be a multiple of 4, got {block_bytes}")
+    nbytes = a.size * it
+    if nbytes == 0:
+        return np.zeros(0, np.uint32)
+    wb = word_bytes(it)
+    w = a.reshape(-1).view(np.dtype(f"<u{wb}")).astype(np.uint32)
+    wpb = words_per_block(block_bytes, it)
+    n_blocks = n_blocks_of(nbytes, block_bytes)
+    pad = n_blocks * wpb - w.size
+    if pad:
+        w = np.concatenate([w, np.zeros(pad, np.uint32)])
+    w = w.reshape(n_blocks, wpb)
+    pos = np.arange(wpb, dtype=np.uint32)
+    h = mix_words(w, pos)
+    return fmix32(np.sum(h, axis=1, dtype=np.uint32))

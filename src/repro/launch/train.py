@@ -18,6 +18,77 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import time
+
+# compile-cache retention knobs: same shape as the checkpoint store's sweep
+# (age gate first, then a size budget), tuned for a shared volume that many
+# fleet members write executables into
+CACHE_GC_MAX_BYTES = 2 << 30          # 2 GiB of cached executables
+CACHE_GC_MAX_AGE_S = 14 * 86400       # entries idle two weeks are dead weight
+CACHE_GC_MIN_INTERVAL_S = 300.0       # walk the dir at most once per 5 min
+
+_last_cache_gc = 0.0
+
+
+def sweep_compilation_cache(cache_dir: str, *,
+                            max_bytes: int = CACHE_GC_MAX_BYTES,
+                            max_age_s: float = CACHE_GC_MAX_AGE_S,
+                            min_interval_s: float = CACHE_GC_MIN_INTERVAL_S,
+                            ) -> int:
+    """Size/age-gated gc of the persistent XLA compilation cache.
+
+    The cache dir on the shared checkpoint volume grows without bound (every
+    new model config / jax version adds executables; nothing ever removes
+    them). Retention mirrors the checkpoint store's pool sweep: entries past
+    the age gate go first (mtime refreshes on cache hits, so "old" means
+    *unused*), then the oldest entries beyond the size budget. Runs
+    opportunistically after checkpoint commits (``CheckpointStore.post_commit``)
+    and rate-limits itself so the directory walk never becomes a per-save
+    cost. Best-effort throughout — a janitor must never fail a save. Returns
+    bytes removed.
+    """
+    import stat as stat_mod
+
+    global _last_cache_gc
+    now = time.time()
+    if min_interval_s > 0 and now - _last_cache_gc < min_interval_s:
+        return 0
+    _last_cache_gc = now
+    entries = []       # (mtime, size, path)
+    try:
+        for name in os.listdir(cache_dir):
+            path = os.path.join(cache_dir, name)
+            try:
+                st = os.stat(path)
+            except OSError:
+                continue
+            if stat_mod.S_ISREG(st.st_mode):   # one stat per entry, no TOCTOU
+                entries.append((st.st_mtime, st.st_size, path))
+    except OSError:
+        return 0
+    removed = 0
+
+    def _rm(size: int, path: str) -> int:
+        try:
+            os.remove(path)
+            return size
+        except OSError:
+            return 0
+
+    entries.sort()                      # oldest first
+    kept = []
+    for mtime, size, path in entries:
+        if now - mtime > max_age_s:
+            removed += _rm(size, path)
+        else:
+            kept.append((mtime, size, path))
+    total = sum(size for _, size, _ in kept)
+    for mtime, size, path in kept:      # oldest-first until under budget
+        if total <= max_bytes:
+            break
+        removed += _rm(size, path)
+        total -= size
+    return removed
 
 
 def setup_compilation_cache(cache_dir: str) -> bool:
@@ -98,6 +169,12 @@ def main(argv=None):
                     provisioning_delay_s=args.provision_delay)
     store = CheckpointStore(args.ckpt_dir,
                             quantize_moments=bool(args.quantize_moments))
+    if args.compile_cache_dir:
+        # cache hygiene rides the checkpoint cadence: after each commit the
+        # (rate-limited) sweep keeps the shared cache dir inside its
+        # size/age budget — off the save's critical path, never fatal
+        store.post_commit.append(
+            lambda d=args.compile_cache_dir: sweep_compilation_cache(d))
     policy = {
         "off": CheckpointPolicy.off(),
         "application": CheckpointPolicy.application(),

@@ -224,11 +224,15 @@ class SpotTrainer:
                         stage_cross_time[si] = clock.now()
                         self.coord.on_stage_end(si, step, state)
                 # staging handoff: the supplier is invoked lazily, only when
-                # the coordinator decides to checkpoint — prestage kicks off
-                # the device→host DMAs right then, so by the time the
-                # extract's gather pass runs the copies are already in flight
-                sig = self.coord.on_step_end(step,
-                                             lambda s=state: sharded.prestage(s),
+                # the coordinator decides to checkpoint. The coordinator owns
+                # the prestage call (it knows the save kind): periodic saves
+                # prestage through the device-delta tracker — fingerprint +
+                # diff compute instead of full-state DMAs — while urgent
+                # saves prestage the plain way, never paying digest kernels
+                # inside the eviction-notice window. The tracker's gathered
+                # blocks are fresh device buffers, so the next step may
+                # freely donate `state`.
+                sig = self.coord.on_step_end(step, lambda s=state: s,
                                              step_duration_s=dur)
                 if sig is Signal.PREEMPTING:
                     preempted = True
@@ -278,6 +282,9 @@ class SpotTrainer:
                 "stage_ckpts": st.stage_ckpts,
                 "ckpt_bytes_written": st.ckpt_bytes_written,
                 "ckpt_time_s": st.ckpt_time_s,
+                "d2h_bytes": st.d2h_bytes,
+                "d2h_bytes_skipped": st.d2h_bytes_skipped,
+                "save_stall_s": st.save_stall_s,
                 "mttr_mean_s": st.mttr_mean_s,
                 "mttr_samples": list(st.mttr_samples),
             },
