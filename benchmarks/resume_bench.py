@@ -1,6 +1,6 @@
 """Fast-resume microbenchmark — the eviction→first-step-back window.
 
-Two legs:
+Legs:
 
 * **restore-to-device** (wall time, CPU): the same committed checkpoint
   (float32 params + int8-quantized mu/nu optimizer moments, the urgent-save
@@ -12,10 +12,22 @@ Two legs:
   stalls from noisy neighbours, and the bench measures the code, not the
   weather. GB/s is logical (dequantized) bytes over wall time.
 
+* **contended restore** (wall time): the same streaming restore while 1/2/4
+  concurrent writers save into the same pool — restore QoS under load. The
+  1-writer figure gates CI against the frozen pre-scheduler collapse
+  (0.269 GB/s, a ~7x drop from idle under fair-share executors).
+
+* **restore storm** (hybrid): N replacement instances restore from one pool
+  simultaneously after a capacity outage while a survivor keeps saving;
+  per-member MTTR-under-storm = spot_sim-derived provisioning gap (virtual)
+  + measured concurrent restore wall time (physical).
+
 * **simulated MTTR** (virtual time): a transparent-mode spot run with
   periodic evictions; reports the coordinator's measured
   eviction→first-step-back windows (provisioning + restore + recompile +
-  data seek, as charged/observed on the virtual clock).
+  data seek). Restore decode wall time is charged onto the virtual clock
+  (``TimeLedger.charge_measured``), so samples are wall-clock-coupled and
+  distinct — a real measurement, not the model's constant.
 
 Results land in ``BENCH_resume.json`` next to a ``baseline`` section frozen
 from the **pre-change** code — reruns never overwrite it, so the ≥1.5×
@@ -98,13 +110,16 @@ def bench_restore_to_device() -> dict:
     return results
 
 
-def bench_contended_restore() -> dict:
-    """Contended MTTR leg: restore throughput while a concurrent writer
-    saves against the *same* store (ROADMAP "MTTR under load") — after an
-    eviction the surviving fleet members keep checkpointing into the shared
-    volume, so the replacement's restore competes for the 9p/NFS executor.
-    Reports best-of-N restore GB/s under load next to the idle figure the
-    main leg measures; the gap is the contention tax."""
+def bench_contended_restore(n_writers: int = 1) -> dict:
+    """Contended MTTR leg: restore throughput while ``n_writers`` concurrent
+    writers save against the *same* store (ROADMAP "Restore QoS") — after an
+    outage the surviving fleet members keep checkpointing into the shared
+    volume, so the replacement's restore competes for the codec workers.
+    With the priority scheduler the restore jumps every queued periodic
+    encode and running encodes yield between chunks, so the figure should
+    track the idle number instead of collapsing ~7x (the frozen 0.27 GB/s
+    pre-scheduler baseline). Reports best-of-N restore GB/s under load next
+    to the idle figure the main leg measures."""
     import threading
 
     import jax
@@ -122,37 +137,38 @@ def bench_contended_restore() -> dict:
         # retention high enough that the writer's steps never gc the
         # restored step out from under the bench
         store = CheckpointStore(td, compress=False, quantize_moments=True,
-                                retention=100)
+                                retention=400)
         store.save(7, state)
 
-        # writer: periodic low-churn delta saves through the device-delta
-        # tracker — the steady-state save shape the fleet actually runs
-        writer_state = {
-            "params": {k: np.asarray(v) + 1.0
-                       for k, v in state["params"].items()},
-            "step": 100}
-        tracker = DeviceDeltaTracker(store.pool, chunk_size=store.chunk_size,
-                                     compress=store.compress)
+        # writers: periodic low-churn delta saves through the device-delta
+        # tracker — the steady-state save shape the fleet actually runs.
+        # Each writer owns a disjoint step range and its own tracker (one
+        # tracker per training process, as in production).
         stop = threading.Event()
-        saved = [0]
+        saved = [0] * n_writers
 
-        def writer():
-            step = 100
+        def writer(wi: int):
             import jax.numpy as jnp
-            base = {k: jnp.asarray(v)
-                    for k, v in writer_state["params"].items()}
+            tracker = DeviceDeltaTracker(store.pool,
+                                         chunk_size=store.chunk_size,
+                                         compress=store.compress)
+            base = {k: jnp.asarray(np.asarray(v) + 1.0 + wi)
+                    for k, v in state["params"].items()}
+            step = 100 + 10_000 * wi
             while not stop.is_set():
                 step += 1
                 st = {"params": {k: v.at[:8].add(float(step))
                                  for k, v in base.items()}, "step": step}
                 try:
                     store.save(step, st, tracker=tracker)
-                    saved[0] += 1
+                    saved[wi] += 1
                 except OSError:
                     break
 
-        t = threading.Thread(target=writer, daemon=True)
-        t.start()
+        threads = [threading.Thread(target=writer, args=(wi,), daemon=True)
+                   for wi in range(n_writers)]
+        for t in threads:
+            t.start()
         try:
             dts = []
             for _ in range(REPS):
@@ -162,13 +178,129 @@ def bench_contended_restore() -> dict:
                 dts.append(time.perf_counter() - t0)
         finally:
             stop.set()
-            t.join(timeout=30)
+            for t in threads:
+                t.join(timeout=30)
         best = min(dts)
-        results["contended_streaming_restore_GBps"] = round(
+        suffix = "" if n_writers == 1 else f"_{n_writers}w"
+        results[f"contended_streaming_restore{suffix}_GBps"] = round(
             nbytes / best / 1e9, 3)
-        results["contended_writer_saves"] = saved[0]
-        print(f"contended_streaming_restore,{best*1e6:.0f}us,"
-              f"{nbytes/best/1e9:.2f}_GBps,writer_saves={saved[0]}")
+        results[f"contended_writer_saves{suffix}"] = sum(saved)
+        print(f"contended_streaming_restore[{n_writers}w],{best*1e6:.0f}us,"
+              f"{nbytes/best/1e9:.2f}_GBps,writer_saves={sum(saved)}")
+    return results
+
+
+def bench_restore_storm(n_instances: int = 4) -> dict:
+    """Fleet-wide restore storm: a capacity outage ends and ``n_instances``
+    replacements restore from one shared pool *simultaneously*, while a
+    surviving member keeps saving into it. The spot simulator supplies each
+    member's provisioning gap (TraceEviction → replacement pays the
+    provider's provisioning delay on a virtual clock); the restores
+    themselves physically execute concurrently on wall clock. MTTR-under-
+    storm per member = simulated provisioning gap + its measured restore
+    wall time — the post-outage number reliability-aware provisioners treat
+    as SLA-binding, and exactly the window the RESTORE lane protects."""
+    import threading
+
+    import jax
+    import numpy as np
+
+    from repro.checkpoint import CheckpointStore, DeviceDeltaTracker
+    from repro.core import TraceEviction, VirtualClock, get_provider
+    from repro.train import state_template_on_device
+
+    state = fixture_state()
+    nbytes = sum(a.nbytes for a in jax.tree.leaves(state)
+                 if hasattr(a, "nbytes"))
+    providers = ["azure", "aws", "gcp"]
+    # simulated leg: one pool per member, eviction at t=10 s, replacement
+    # pays the 120 s provisioning delay — wait_for_instance walks the
+    # virtual clock through death + gap, giving each member a real
+    # spot_sim-derived provisioning window
+    gaps = []
+    for i in range(n_instances):
+        clock = VirtualClock()
+        prov = get_provider(providers[i % len(providers)])
+        pool = prov.make_pool(clock, TraceEviction((10.0,)), None,
+                              provisioning_delay_s=120.0)
+        pool.start()
+        inst = pool.wait_for_instance()
+        clock.advance(10.0 + (pool.notice_s or 0.0) + 1.0)
+        while pool.tick() is not None:      # ride the notice out
+            clock.sleep(1.0)
+        died_at = clock.now()
+        pool.wait_for_instance()
+        gaps.append(clock.now() - died_at)
+        pool.shutdown()
+
+    results: dict = {}
+    with tempfile.TemporaryDirectory() as td:
+        store = CheckpointStore(td, compress=False, quantize_moments=True,
+                                retention=400)
+        store.save(7, state)
+        stop = threading.Event()
+
+        def survivor():
+            import jax.numpy as jnp
+            tracker = DeviceDeltaTracker(store.pool,
+                                         chunk_size=store.chunk_size,
+                                         compress=store.compress)
+            base = {k: jnp.asarray(np.asarray(v) + 1.0)
+                    for k, v in state["params"].items()}
+            step = 100
+            while not stop.is_set():
+                step += 1
+                st = {"params": {k: v.at[:8].add(float(step))
+                                 for k, v in base.items()}, "step": step}
+                try:
+                    store.save(step, st, tracker=tracker)
+                except OSError:
+                    break
+
+        # each member restores to its own device template (concurrently)
+        tpls = [state_template_on_device(state) for _ in range(n_instances)]
+        walls = [0.0] * n_instances
+        errs = []
+        barrier = threading.Barrier(n_instances)
+
+        def member(i: int):
+            try:
+                barrier.wait(timeout=60)     # everyone restores at once
+                t0 = time.perf_counter()
+                got, _ = store.restore(tpls[i], step=7, streaming=True)
+                jax.block_until_ready(got)
+                walls[i] = time.perf_counter() - t0
+            except BaseException as e:
+                errs.append(e)
+
+        wt = threading.Thread(target=survivor, daemon=True)
+        wt.start()
+        try:
+            t0_all = time.perf_counter()
+            threads = [threading.Thread(target=member, args=(i,), daemon=True)
+                       for i in range(n_instances)]
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join(timeout=120)
+            span = time.perf_counter() - t0_all
+        finally:
+            stop.set()
+            wt.join(timeout=30)
+        if errs:
+            raise errs[0]
+        mttrs = [g + w for g, w in zip(gaps, walls)]
+        results["storm_instances"] = n_instances
+        results["storm_aggregate_GBps"] = round(
+            n_instances * nbytes / span / 1e9, 3)
+        results["storm_restore_walls_s"] = [round(w, 3) for w in walls]
+        results["mttr_under_storm_samples_s"] = [round(m, 2) for m in mttrs]
+        results["mttr_under_storm_mean_s"] = round(sum(mttrs) / len(mttrs), 2)
+        results["mttr_under_storm_max_s"] = round(max(mttrs), 2)
+        print(f"restore_storm,n={n_instances},"
+              f"aggregate={results['storm_aggregate_GBps']}_GBps,"
+              f"mttr_mean={results['mttr_under_storm_mean_s']}s,"
+              f"mttr_max={results['mttr_under_storm_max_s']}s")
     return results
 
 
@@ -183,8 +315,11 @@ def bench_mttr() -> dict:
     coord = row.report.coordinator
     samples = coord.get("mttr_samples", [])
     out = {
-        "mttr_mean_s": round(coord.get("mttr_mean_s", 0.0), 2),
-        "mttr_samples_s": [round(s, 2) for s in samples],
+        "mttr_mean_s": round(coord.get("mttr_mean_s", 0.0), 3),
+        # 3 decimals: the samples are wall-clock-coupled now (measured
+        # restore time charged onto the virtual clock), and the rounding
+        # must not collapse them back into one constant
+        "mttr_samples_s": [round(s, 3) for s in samples],
         "evictions": row.report.evictions_seen,
         "restores": row.report.restores,
     }
@@ -193,10 +328,22 @@ def bench_mttr() -> dict:
     return out
 
 
+# restore-under-one-writer must stay at least this multiple of the frozen
+# pre-scheduler collapse (0.269 GB/s) — the CI smoke gate for restore QoS
+CONTENDED_GATE_X = 3.0
+
+
 def main() -> dict:
     results = bench_restore_to_device()
-    results.update(bench_contended_restore())
+    for n_writers in (1, 2, 4):
+        results.update(bench_contended_restore(n_writers))
+    results.update(bench_restore_storm())
     results.update(bench_mttr())
+    from repro.checkpoint import codec_sched
+    sched = codec_sched.snapshot_stats()
+    results["scheduler_yields"] = sched["yields"]
+    results["scheduler_restore_queue_wait_s"] = round(
+        sched["restore"]["queue_wait_s"], 4)
     path = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..",
                         BENCH_JSON)
     doc = {}
@@ -218,16 +365,34 @@ def main() -> dict:
                     "(no frozen pre-change baseline found)",
         "restore_to_device_GBps": results.get(
             "serial_restore_then_put_GBps", 0.0)})
+    # the pre-scheduler contended collapse, frozen the same way: first run
+    # on a file without the key seeds it (the checked-in file carries the
+    # real pre-change 0.269), later runs never overwrite it
+    doc["baseline"].setdefault(
+        "contended_restore_GBps",
+        results.get("contended_streaming_restore_GBps", 0.0))
     base = doc["baseline"].get("restore_to_device_GBps", 0.0)
     cur = results.get("streaming_restore_to_device_GBps", 0.0)
     if base:
         results["speedup_vs_frozen_baseline"] = round(cur / base, 2)
         print(f"speedup_vs_frozen_baseline,{results['speedup_vs_frozen_baseline']}x")
+    cbase = doc["baseline"].get("contended_restore_GBps", 0.0)
+    ccur = results.get("contended_streaming_restore_GBps", 0.0)
+    if cbase:
+        results["contended_speedup_vs_frozen_baseline"] = round(ccur / cbase, 2)
+        print("contended_speedup_vs_frozen_baseline,"
+              f"{results['contended_speedup_vs_frozen_baseline']}x")
     doc["current"] = results
     with open(path, "w") as f:
         json.dump(doc, f, indent=2)
         f.write("\n")
     print(f"(recorded to {os.path.relpath(path)})")
+    # restore-QoS smoke gate: restore under one concurrent writer must not
+    # collapse back toward the pre-scheduler fair-share behaviour
+    if cbase and ccur < CONTENDED_GATE_X * cbase:
+        raise SystemExit(
+            f"restore QoS regression: contended restore {ccur} GB/s < "
+            f"{CONTENDED_GATE_X}x frozen baseline {cbase} GB/s")
     return results
 
 

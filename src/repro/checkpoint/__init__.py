@@ -1,9 +1,12 @@
 """Distributed checkpoint substrate: serialization, sharded save/restore,
-atomic store with incremental (delta) chunk pool, async writer.
+atomic store with incremental (delta) chunk pool, async writer, and the
+priority codec scheduler that gives restore QoS over background encodes.
 See DESIGN.md §3."""
 
 from .async_ckpt import AsyncCheckpointer
 from .chunkstore import ChunkPool, ChunkRef, DeltaIndex
+from .codec_sched import (PERIODIC, RESTORE, URGENT, CodecLane,
+                          CodecScheduler)
 from .device_delta import DeltaBlocks, DeviceDeltaTracker
 from .sharded import (CheckpointReader, Snapshot, extract_snapshot, prestage,
                       restore_to_template, restore_to_template_streaming)
@@ -11,7 +14,8 @@ from .store import CheckpointInfo, CheckpointStore
 
 __all__ = [
     "AsyncCheckpointer", "CheckpointInfo", "CheckpointReader", "CheckpointStore",
-    "ChunkPool", "ChunkRef", "DeltaBlocks", "DeltaIndex", "DeviceDeltaTracker",
-    "Snapshot", "extract_snapshot", "prestage", "restore_to_template",
+    "ChunkPool", "ChunkRef", "CodecLane", "CodecScheduler", "DeltaBlocks",
+    "DeltaIndex", "DeviceDeltaTracker", "PERIODIC", "RESTORE", "Snapshot",
+    "URGENT", "extract_snapshot", "prestage", "restore_to_template",
     "restore_to_template_streaming",
 ]

@@ -122,6 +122,14 @@ class AsyncCheckpointer:
         window cannot wait for a digest round-trip at a step boundary, and
         the delta-mode chunk pool already makes the *write* leg incremental
         via the raw-digest memo.
+
+        The write runs on a dedicated transient thread, not the periodic
+        writer thread: an inflight periodic save must not serialize the
+        notice window. The store's commit protocol is multi-writer safe
+        (idempotent pool puts, per-save stage dirs, commit lock), and at the
+        codec level the urgent save's encode jobs enter the scheduler's
+        URGENT lane — queued periodic encodes wait, and running ones yield
+        their workers between chunks.
         """
         snap = sharded.extract_snapshot(
             state, step=step, mesh_info=mesh_info,
@@ -138,7 +146,9 @@ class AsyncCheckpointer:
         except queue.Empty:
             pass
         job = _Job(snapshot=snap, kind=kind, extra=extra, done=threading.Event())
-        self._queue.put(job)
+        runner = threading.Thread(target=self._run_urgent, args=(job,),
+                                  daemon=True, name="spoton-ckpt-urgent")
+        runner.start()
         if not job.done.wait(timeout=timeout_s):
             raise TimeoutError(
                 f"termination checkpoint at step {step} missed the notice window")
@@ -146,6 +156,21 @@ class AsyncCheckpointer:
             raise RuntimeError("termination checkpoint failed") from job.error
         assert job.result is not None
         return job.result
+
+    def _run_urgent(self, job: _Job) -> None:
+        """Body of the transient urgent-save thread — same bookkeeping as
+        the periodic worker, minus the queue."""
+        try:
+            job.result = self.store.save_snapshot(
+                job.snapshot, kind=job.kind, extra=job.extra)
+            with self._lock:
+                self._completed.append(job.result)
+        except BaseException as e:
+            job.error = e
+            with self._lock:
+                self._last_error = e
+        finally:
+            job.done.set()
 
     def drain_completed(self) -> list[CheckpointInfo]:
         """Pop infos of writes finished since the last drain (all kinds,

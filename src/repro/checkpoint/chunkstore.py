@@ -41,7 +41,11 @@ while any writer still depends on it.
 
 Compression runs per chunk on a process-wide worker pool (zlib/zstd and
 blake2b release the GIL), so encode overlaps across tensors instead of
-running single-threaded.
+running single-threaded. The pool is the priority scheduler in
+``codec_sched``: encode/decode jobs carry a lane (URGENT save > RESTORE >
+PERIODIC save), restore jobs jump queued periodic encodes, and the chunk
+loop below yields between chunks so an in-flight periodic save hands its
+worker to a restore instead of holding it for a whole piece.
 """
 
 from __future__ import annotations
@@ -51,50 +55,42 @@ import os
 import threading
 import uuid
 import zlib
-from concurrent.futures import ThreadPoolExecutor, wait as futures_wait
+from concurrent.futures import wait as futures_wait
 from dataclasses import dataclass
 from typing import Callable, Iterator
 
 import numpy as np
 
+from . import codec_sched
 from . import serialize as ser
+from .codec_sched import CodecLane
 from .ioutil import array_bytes_view, fsync_dir, mmap_view, release_view
 
 CHUNKS_DIRNAME = "chunks"
 DEFAULT_CHUNK_SIZE = 1 << 20          # 1 MiB: dedup granularity vs. ref count
 
-_executor: ThreadPoolExecutor | None = None
-_urgent_executor: ThreadPoolExecutor | None = None
-_executor_lock = threading.Lock()
+
+def codec_executor() -> CodecLane:
+    """PERIODIC lane of the process-wide codec scheduler — background
+    encode/compress work, preemptible between chunks."""
+    return codec_sched.lane(codec_sched.PERIODIC)
 
 
-def codec_executor() -> ThreadPoolExecutor:
-    """Process-wide encode/compress pool, shared by every store."""
-    global _executor
-    if _executor is None:
-        with _executor_lock:
-            if _executor is None:
-                # cores + 2: codec jobs interleave GIL-releasing compute
-                # (hash/crc/compress) with file IO, so slight oversubscription
-                # hides syscall stalls without thrashing small boxes
-                _executor = ThreadPoolExecutor(
-                    max_workers=min(8, (os.cpu_count() or 2) + 2),
-                    thread_name_prefix="spoton-codec")
-    return _executor
+def restore_executor() -> CodecLane:
+    """RESTORE lane: decode/read jobs inside the MTTR window. These jump
+    every queued periodic encode and are helped inline by yielding periodic
+    workers, so restore throughput no longer collapses when a concurrent
+    writer is saving into the same pool."""
+    return codec_sched.lane(codec_sched.RESTORE)
 
 
-def urgent_executor() -> ThreadPoolExecutor:
-    """Reserved lane for termination checkpoints: an urgent save's encode
-    jobs must never queue behind other fleet members' periodic saves on the
-    shared executor — the eviction-notice window pays for every queued task."""
-    global _urgent_executor
-    if _urgent_executor is None:
-        with _executor_lock:
-            if _urgent_executor is None:
-                _urgent_executor = ThreadPoolExecutor(
-                    max_workers=min(8, os.cpu_count() or 2),
-                    thread_name_prefix="spoton-codec-urgent")
-    return _urgent_executor
+def urgent_executor() -> CodecLane:
+    """URGENT lane for termination checkpoints: an urgent save's encode jobs
+    preempt everything queued — the eviction-notice window pays for every
+    queued task. This used to be a second reserved ThreadPoolExecutor; as a
+    lane of the single pool it no longer competes with the shared workers
+    for the same physical cores."""
+    return codec_sched.lane(codec_sched.URGENT)
 
 
 def chunk_digest(data) -> str:
@@ -310,6 +306,10 @@ def store_payload_chunks(
     refs: list[ChunkRef] = []
     written = 0
     for ci, raw_chunk in enumerate(iter_chunks(raw, chunk_size)):
+        # preemption checkpoint: a periodic-save encode hands its worker to
+        # any queued restore/urgent job here, bounding their queue delay to
+        # one chunk's encode instead of one piece's
+        codec_sched.maybe_yield()
         rd = chunk_digest(raw_chunk)
         memo = index.get((key, ci)) if index is not None else None
         if (memo is not None and memo.raw_digest == rd and memo.codec == codec
@@ -400,7 +400,7 @@ def _decode_chunk_into(pool: ChunkPool, ref: ChunkRef, window: memoryview) -> No
 
 
 def read_payload_into(pool: ChunkPool, refs: list[dict], dst,
-                      *, executor: ThreadPoolExecutor | None = None) -> None:
+                      *, executor: CodecLane | None = None) -> None:
     """Reassemble a tensor's raw payload from its manifest chunk refs
     directly into ``dst`` (an ndarray or writable buffer) — no per-chunk
     ``bytes`` concatenation, no ``frombuffer(...).copy()``.

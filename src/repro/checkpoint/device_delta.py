@@ -59,6 +59,7 @@ import functools
 from ..kernels.fingerprint import (fingerprint_blocks, fingerprint_diff,
                                    n_blocks_of, supported_dtype)
 from . import chunkstore
+from . import codec_sched
 from . import serialize as ser
 from .ioutil import array_bytes_view
 
@@ -180,9 +181,12 @@ class _Staged:
             # keeps reused chunks' mtimes ahead of cross-writer age gates;
             # throttling it is what removes the per-chunk stat+utime
             # syscalls from the steady-state save, and the pass itself runs
-            # batched on the codec executor (stat/utime release the GIL) so
-            # a large leaf — thousands of blocks — doesn't serialize two
-            # syscalls per chunk on the thread the trainer is stalled on
+            # batched on the scheduler's RESTORE lane (stat/utime release
+            # the GIL) so a large leaf — thousands of blocks — doesn't
+            # serialize two syscalls per chunk on the thread the trainer is
+            # stalled on; the restore lane because the trainer is stalled
+            # on this pass right now — it must not queue behind background
+            # periodic encodes
             pool = self.tracker.pool
             refs = ent.refs
 
@@ -196,7 +200,7 @@ class _Staged:
             if len(clean) <= batch:
                 dirty.update(_verify(clean))
             else:
-                ex = chunkstore.codec_executor()
+                ex = chunkstore.restore_executor()
                 for fut in [ex.submit(_verify, clean[i:i + batch])
                             for i in range(0, len(clean), batch)]:
                     dirty.update(fut.result())
@@ -433,6 +437,9 @@ def write_delta_blocks_piece(pool: chunkstore.ChunkPool, key: tuple,
             pin(ref.hash)
             refs.append(ref)
             continue
+        # periodic-save encode: hand the worker to queued restore/urgent
+        # jobs between blocks (chunk-granular preemption)
+        codec_sched.maybe_yield()
         ref, n, rd = chunkstore.store_chunk(
             pool, db.dirty_view(j, ci), comp=comp, pin=pin,
             dirty_dirs=dirty_dirs)

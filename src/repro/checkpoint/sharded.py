@@ -470,7 +470,7 @@ class CheckpointReader:
                 dst = ser.alloc_payload(rec["dtype"], rec["shape"], quant)
             chunkstore.read_payload_into(
                 self.chunk_pool, rec["chunks"], dst,
-                executor=chunkstore.codec_executor() if parallel else None)
+                executor=chunkstore.restore_executor() if parallel else None)
             return ser.finish_payload(dst, dtype_name=rec["dtype"],
                                       quant=quant, scale=rec.get("scale"))
         reader = self._reader(rec["file"])
@@ -582,7 +582,7 @@ class CheckpointReader:
             dst = ser.alloc_payload(rec["dtype"], shape, quant)
             chunkstore.read_payload_into(
                 self.chunk_pool, crefs, dst,
-                executor=chunkstore.codec_executor() if parallel else None)
+                executor=chunkstore.restore_executor() if parallel else None)
             return dst, rec["dtype"], quant, rec.get("scale")
         view = self._reader(rec["file"]).read_payload_view(rec["name"])
         if view is not None:
@@ -594,11 +594,11 @@ class CheckpointReader:
         return dst, rec["dtype"], quant, rec.get("scale")
 
     def read_many(self, names: list[str]) -> dict[str, np.ndarray]:
-        """Read whole tensors in parallel (one codec-executor job per leaf,
+        """Read whole tensors in parallel (one restore-lane job per leaf,
         sub-4KiB leaves coalesced — see ``_submit_leaf_jobs``; inside each
         job chunk decode is serial — no nested submission)."""
         resolve, futs = _submit_leaf_jobs(
-            chunkstore.codec_executor(), names, self.stored_nbytes,
+            chunkstore.restore_executor(), names, self.stored_nbytes,
             lambda n: self.read_slice(n, None, parallel=False))
         try:
             return {n: resolve[n]() for n in names}
@@ -694,9 +694,11 @@ def restore_to_template_streaming(reader: CheckpointReader, template) -> Any:
     """Streaming disk→device restore: ``restore_to_template`` semantics with
     the read→decode→``jax.device_put`` stages pipelined.
 
-    Every leaf's read/decode job is submitted to the codec executor up
-    front (tiny leaves batched into one task, int8-quantized leaves queued
-    first); the main thread consumes completions and immediately issues the
+    Every leaf's read/decode job is submitted to the scheduler's RESTORE
+    lane up front (tiny leaves batched into one task, int8-quantized leaves
+    queued first) — restore work jumps every queued periodic-save encode,
+    and yielding periodic workers help it run (restore QoS); the main
+    thread consumes completions and immediately issues the
     asynchronous host→device transfer — so disk IO, decompression and H2D
     DMA of different tensors overlap instead of serializing. int8-quantized
     payloads cross the link at stored (1/4) width and widen on device in a
@@ -712,7 +714,7 @@ def restore_to_template_streaming(reader: CheckpointReader, template) -> Any:
     named = ser.flatten_state(template)
     treedef = jax.tree_util.tree_structure(template)
     _check_template(reader, named)
-    ex = chunkstore.codec_executor()
+    ex = chunkstore.restore_executor()
     all_futs: list = []
 
     # --- planning pass ----------------------------------------------------

@@ -142,8 +142,9 @@ class CheckpointStore:
                 # per chunk); the step dir itself holds only the manifest, so
                 # the stage->rename->marker protocol is unchanged. Chunks from
                 # a writer killed here are orphans, swept by gc once old.
-                # Termination saves encode on a reserved executor so the
-                # notice window never queues behind periodic save traffic.
+                # Termination saves encode on the scheduler's URGENT lane
+                # so the notice window never queues behind periodic save
+                # traffic — and periodic encodes yield their workers to it.
                 records, new_bytes = sharded.write_snapshot_delta(
                     snapshot, self.pool, compress=self.compress,
                     quantize_moments=self.quantize_moments,

@@ -47,10 +47,12 @@ from __future__ import annotations
 
 import enum
 import logging
+import time as _time
 from collections import deque
 from dataclasses import dataclass, field
 from typing import Any, Callable
 
+from ..checkpoint import codec_sched
 from ..checkpoint.async_ckpt import AsyncCheckpointer
 from ..checkpoint.sharded import Snapshot, extract_snapshot, prestage
 from ..checkpoint.store import CheckpointStore
@@ -121,6 +123,16 @@ class CoordinatorStats:
     d2h_bytes: int = 0
     d2h_bytes_skipped: int = 0
     save_stall_s: float = 0.0
+    # restore-QoS scheduler split, from the codec scheduler's RESTORE lane:
+    # queue-wait (job submitted → worker picked it up: a starved scheduler)
+    # vs decode execution (worker busy on the bytes: a slow disk). Lane
+    # counters are process-wide, so under concurrent restores from several
+    # coordinators the split is a fleet aggregate, not per-member.
+    restore_queue_wait_s: float = 0.0
+    restore_decode_s: float = 0.0
+    # times a periodic-save encode handed its worker to a higher-priority
+    # job at a chunk boundary (cooperative preemption)
+    save_yields: int = 0
     # MTTR: eviction (detach) → first training step completed on the
     # replacement. Covers provisioning, restore, recompilation and data
     # fast-forward — the full window the fast-resume pipeline minimizes.
@@ -174,6 +186,9 @@ class SpotOnCoordinator:
         # MTTR bookkeeping: set at detach (the eviction moment), consumed by
         # the first completed step on the replacement instance
         self._evicted_at: float | None = None
+        # last-seen global yield count (the scheduler counter is
+        # process-wide and monotonic; we fold deltas)
+        self._seen_yields = codec_sched.snapshot_stats()["yields"]
 
     @property
     def time_model(self) -> TimeModel | None:
@@ -231,7 +246,15 @@ class SpotOnCoordinator:
     def _drain_async_stats(self) -> None:
         """Fold finished background writes into the stats. Periodic/rebalance
         saves account their *physical* bytes here (delta saves write only
-        dirty chunks); urgent saves were accounted synchronously."""
+        dirty chunks); urgent saves were accounted synchronously. Also folds
+        the codec scheduler's cooperative-yield counter (process-wide) so
+        run reports show how often background encodes ceded their worker."""
+        yields = codec_sched.snapshot_stats()["yields"]
+        delta = yields - self._seen_yields
+        if delta > 0:
+            self._seen_yields = yields
+            self.stats.save_yields += delta
+            self.ledger.count("save_yields", delta)
         if self._async is None:
             return
         for info in self._async.drain_completed():
@@ -421,14 +444,32 @@ class SpotOnCoordinator:
         ``streaming`` (default) pipelines disk→decode→device transfers —
         bit-identical state, shorter resume leg of the MTTR window. The
         modeled read cost is charged under the ``restore`` category either
-        way (the schedule changes, the bytes moved do not)."""
+        way (the schedule changes, the bytes moved do not); on top of it
+        the *measured* wall time of the decode is charged under
+        ``restore_wall`` — the restore physically executes even in virtual
+        mode, so two restores that contended differently land at different
+        clock readings instead of collapsing onto the model's constant.
+        The RESTORE-lane scheduler deltas across the call split that wall
+        time into queue-wait (starved scheduler) vs decode (slow disk) on
+        both ``CoordinatorStats`` and the ledger's observation trail."""
         t0 = self.clock.now()
+        sched0 = codec_sched.snapshot_stats()["restore"]
+        w0 = _time.perf_counter()
         try:
             state, man = self.store.restore(template, streaming=streaming)
         except FileNotFoundError:
             return None
+        wall = _time.perf_counter() - w0
+        sched1 = codec_sched.snapshot_stats()["restore"]
+        queue_wait = sched1["queue_wait_s"] - sched0["queue_wait_s"]
+        decode = sched1["exec_s"] - sched0["exec_s"]
+        self.stats.restore_queue_wait_s += queue_wait
+        self.stats.restore_decode_s += decode
+        self.ledger.observe("restore_queue_wait", queue_wait)
+        self.ledger.observe("restore_decode", decode)
         nbytes = sum(t["nbytes"] for t in man.tensors)
         self.ledger.charge(self.ledger.read_s(nbytes), category="restore")
+        self.ledger.charge_measured(wall, category="restore_wall")
         self.stats.restores += 1
         self.stats.restore_time_s += (self.clock.now() - t0)
         return state, man

@@ -80,6 +80,23 @@ class TimeLedger:
         self.charged[category] = self.charged.get(category, 0.0) + seconds
         return seconds
 
+    def charge_measured(self, seconds: float, *, category: str) -> float:
+        """Advance a VirtualClock by a *measured* wall duration.
+
+        For work that physically executes even under a virtual clock —
+        the restore decode really reads the disk and really contends with
+        real writer threads. Charging the measured wall time instead of a
+        byte-count model makes virtual-mode samples (MTTR above all)
+        wall-clock-coupled: two restores that ran at different speeds land
+        at different clock readings instead of collapsing onto the model's
+        constant. Needs no TimeModel; no-op on wall clocks (the duration
+        already elapsed there)."""
+        if seconds <= 0.0 or not self.virtual:
+            return 0.0
+        self.clock.advance(seconds)
+        self.charged[category] = self.charged.get(category, 0.0) + seconds
+        return seconds
+
     def charge_step(self, step_time_s: float | None) -> float:
         """Charge one training step's modeled duration (virtual mode only).
         Unlike ``charge`` this needs no TimeModel — step cost is given."""

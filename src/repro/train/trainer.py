@@ -285,6 +285,9 @@ class SpotTrainer:
                 "d2h_bytes": st.d2h_bytes,
                 "d2h_bytes_skipped": st.d2h_bytes_skipped,
                 "save_stall_s": st.save_stall_s,
+                "restore_queue_wait_s": st.restore_queue_wait_s,
+                "restore_decode_s": st.restore_decode_s,
+                "save_yields": st.save_yields,
                 "mttr_mean_s": st.mttr_mean_s,
                 "mttr_samples": list(st.mttr_samples),
             },

@@ -217,11 +217,16 @@ class TestMttrAccounting:
         assert restored is not None
         _state, man = restored
         nbytes = sum(t["nbytes"] for t in man.tensors)
+        # the measured decode wall time is charged too (restore_wall): it
+        # couples the virtual-mode MTTR sample to the physically-executed
+        # restore, so samples differ run to run instead of being a constant
+        wall = coord.ledger.charged["restore_wall"]
+        assert wall > 0.0
         assert clock.now() == pytest.approx(
-            t0 + 50.0 + coord.ledger.read_s(nbytes))
+            t0 + 50.0 + coord.ledger.read_s(nbytes) + wall)
         clock.advance(2.0)                   # the first step back
         coord.on_step_end(4, lambda: s)
-        expected = 50.0 + coord.ledger.read_s(nbytes) + 2.0
+        expected = 50.0 + coord.ledger.read_s(nbytes) + wall + 2.0
         assert coord.stats.mttr_samples == [pytest.approx(expected)]
         assert coord.stats.mttr_mean_s == pytest.approx(expected)
         assert coord.ledger.observed["mttr"] == [pytest.approx(expected)]
