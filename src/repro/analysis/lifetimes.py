@@ -1,0 +1,172 @@
+"""SPOT020/021 — zero-copy buffer lifetimes and the one-copy payload rule.
+
+The read path hands out ``memoryview``s over pool-owned mmaps
+(``mmap_view`` / ``ChunkPool.read_view`` / ``read_payload_view``): cheap,
+but the mapping behind the view can be unmapped on eviction, so a view must
+stay inside a scope that ends with ``release_view`` (or be returned, which
+transfers that obligation to the caller, or live on an object that owns the
+mapping and exposes ``close``). A view stashed on ``self``/a global with no
+close path outlives its mapping and becomes a use-after-unmap (SPOT020).
+
+The write path has the dual rule (the PR 3 freeze fix): snapshot payloads
+must be built from *copied* host arrays — ``np.asarray(x)`` on a caller-
+owned array is a no-copy alias, and the async writer thread then encodes
+memory the training step is concurrently mutating, producing a checkpoint
+that is internally torn (SPOT021). Use ``serialize.to_host`` /
+``np.array(..., copy=True)``.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Optional
+
+from .core import Finding, ModuleInfo, RepoModel, dotted, iter_funcs, terminal_name
+
+# producers of mmap-backed views whose release must be tracked
+VIEW_PRODUCERS = {"mmap_view", "read_view", "read_payload_view"}
+# additionally forbidden from living on self/globals without a close path
+STORED_VIEW_PRODUCERS = VIEW_PRODUCERS | {"memoryview"}
+
+
+def check_repo(model: RepoModel) -> list[Finding]:
+    findings: list[Finding] = []
+    for mod in model.modules:
+        findings.extend(_check_module(mod, model))
+    return findings
+
+
+def _check_module(mod: ModuleInfo, model: RepoModel) -> list[Finding]:
+    findings: list[Finding] = []
+
+    # module-level `NAME = mmap_view(...)` — a global view never dies
+    for node in mod.tree.body:
+        if isinstance(node, ast.Assign) and _producer_of(node.value,
+                                                        STORED_VIEW_PRODUCERS):
+            findings.append(Finding(
+                path=mod.relpath, line=node.lineno, col=node.col_offset,
+                code="SPOT020",
+                message=("mmap/memoryview stored in a module global — the "
+                         "view outlives any release scope and pins (or "
+                         "dangles into) its mapping forever; keep views "
+                         "function-local with release_view, or on an object "
+                         "with close()"),
+            ))
+
+    for classname, fn in iter_funcs(mod.tree):
+        findings.extend(_check_fn(mod, model, classname, fn))
+    return findings
+
+
+def _producer_of(expr: ast.AST, producers: set[str]) -> Optional[str]:
+    if isinstance(expr, ast.Call):
+        t = terminal_name(expr.func)
+        if t in producers:
+            return t
+    return None
+
+
+def _check_fn(mod: ModuleInfo, model: RepoModel, classname: Optional[str],
+              fn) -> list[Finding]:
+    findings: list[Finding] = []
+
+    locals_to_track: list[tuple[str, ast.Assign]] = []
+    for node in ast.walk(fn):
+        if not isinstance(node, ast.Assign) or len(node.targets) != 1:
+            continue
+        tgt = node.targets[0]
+        producer = _producer_of(node.value, STORED_VIEW_PRODUCERS)
+        if producer is None:
+            continue
+        # self.X = <view producer>: allowed only when the class owns the
+        # lifetime, i.e. defines close()/__exit__/release()
+        if isinstance(tgt, ast.Attribute) and isinstance(tgt.value, ast.Name) \
+                and tgt.value.id == "self":
+            if classname and (mod.module_name, classname) in model.closeable_classes:
+                continue
+            findings.append(Finding(
+                path=mod.relpath, line=node.lineno, col=node.col_offset,
+                code="SPOT020",
+                message=(f"view stored on self.{tgt.attr} but "
+                         f"{classname or 'this class'} has no close()/"
+                         f"__exit__ — the view escapes every release scope; "
+                         f"give the class a close() that release_view()s it, "
+                         f"or keep the view function-local"),
+            ))
+        elif isinstance(tgt, ast.Name) \
+                and _producer_of(node.value, VIEW_PRODUCERS):
+            locals_to_track.append((tgt.id, node))
+
+    if locals_to_track:
+        released: set[str] = set()
+        returned: set[str] = set()
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Call) \
+                    and terminal_name(node.func) == "release_view":
+                for arg in node.args:
+                    if isinstance(arg, ast.Name):
+                        released.add(arg.id)
+            elif isinstance(node, ast.Return) and node.value is not None:
+                for sub in ast.walk(node.value):
+                    if isinstance(sub, ast.Name):
+                        returned.add(sub.id)
+        for name, assign in locals_to_track:
+            if name in released or name in returned:
+                continue
+            findings.append(Finding(
+                path=mod.relpath, line=assign.lineno, col=assign.col_offset,
+                code="SPOT020",
+                message=(f"mmap-backed view {name!r} is neither "
+                         f"release_view()'d nor returned from "
+                         f"{fn.name!r} — the mapping leaks and a later "
+                         f"eviction turns the view into a use-after-unmap; "
+                         f"release it in a finally block or return it to "
+                         f"transfer ownership"),
+            ))
+
+    # SPOT021: np.asarray on a bare name in the checkpoint layer aliases
+    # caller memory into the payload instead of copying it. Scoped to
+    # repro.checkpoint.* — elsewhere (kernels, optim) asarray is a
+    # device→host materialization, which *does* copy. Exempt:
+    #   - jnp/jax.asarray (host→device put, copies);
+    #   - float(np.asarray(x)) / int(...) scalar conversions (no buffer
+    #     survives);
+    #   - functions that also call x.copy() or np.array(x, ...): the
+    #     to_host idiom, where asarray is the jax/sequence branch and the
+    #     numpy branch is explicitly copied.
+    if not mod.module_name.startswith("repro.checkpoint"):
+        return findings
+    scalar_wrapped: set[int] = set()
+    copied_names: set[str] = set()
+    for node in ast.walk(fn):
+        if not isinstance(node, ast.Call):
+            continue
+        t = terminal_name(node.func)
+        if isinstance(node.func, ast.Name) and node.func.id in ("float", "int"):
+            for arg in node.args:
+                scalar_wrapped.add(id(arg))
+        elif t == "copy" and isinstance(node.func, ast.Attribute) \
+                and isinstance(node.func.value, ast.Name):
+            copied_names.add(node.func.value.id)
+        elif t == "array" and node.args and isinstance(node.args[0], ast.Name):
+            copied_names.add(node.args[0].id)
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Call) and terminal_name(node.func) == "asarray" \
+                and node.args and isinstance(node.args[0], ast.Name):
+            d = dotted(node.func) or ""
+            if d.startswith(("jnp.", "jax.")):
+                continue
+            if id(node) in scalar_wrapped:
+                continue
+            if node.args[0].id in copied_names:
+                continue
+            findings.append(Finding(
+                path=mod.relpath, line=node.lineno, col=node.col_offset,
+                code="SPOT021",
+                message=(f"np.asarray({node.args[0].id}) does not copy — a "
+                         f"snapshot leaf built from it aliases memory the "
+                         f"training step keeps mutating while the writer "
+                         f"thread encodes it (torn checkpoint); use "
+                         f"serialize.to_host / np.array(..., copy=True)"),
+            ))
+    return findings

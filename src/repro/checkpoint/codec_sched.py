@@ -111,19 +111,30 @@ class CodecScheduler:
         if priority not in LANE_NAMES:
             raise ValueError(f"unknown codec priority {priority!r}")
         with self._cond:
-            if self._shutdown:
-                raise RuntimeError("codec scheduler is shut down")
-            job = _Job(priority, next(self._seq), fn, args, kwargs)
-            heapq.heappush(self._heap, job)
-            self._stats[LANE_NAMES[priority]]["submitted"] += 1
-            if self._idle > 0:
-                self._cond.notify()
-            elif len(self._threads) < self.max_workers:
-                t = threading.Thread(
-                    target=self._worker, daemon=True,
-                    name=f"spoton-codec-{len(self._threads)}")
-                self._threads.append(t)
-                t.start()
+            if not self._shutdown:
+                job = _Job(priority, next(self._seq), fn, args, kwargs)
+                heapq.heappush(self._heap, job)
+                self._stats[LANE_NAMES[priority]]["submitted"] += 1
+                if self._idle > 0:
+                    self._cond.notify()
+                elif len(self._threads) < self.max_workers:
+                    t = threading.Thread(
+                        target=self._worker, daemon=True,
+                        name=f"spoton-codec-{len(self._threads)}")
+                    self._threads.append(t)
+                    t.start()
+                return job.future
+        if priority != URGENT:
+            raise RuntimeError("codec scheduler is shut down")
+        # URGENT work is a termination save racing interpreter teardown:
+        # the atexit hook has already shut the lane workers down, but the
+        # eviction-notice checkpoint must still become durable. Run the job
+        # inline on the submitter's thread and hand back a completed
+        # future — the caller sees the same submit/result contract.
+        with self._cond:
+            self._stats[LANE_NAMES[URGENT]]["submitted"] += 1
+        job = _Job(URGENT, next(self._seq), fn, args, kwargs)
+        self._run(job)
         return job.future
 
     # -- workers ------------------------------------------------------------
@@ -214,9 +225,18 @@ class CodecScheduler:
         with self._cond:
             self._shutdown = True
             pending: list[_Job] = []
+            urgent: list[_Job] = []
             if cancel_pending:
-                pending, self._heap = self._heap, []
+                drained, self._heap = self._heap, []
+                for job in drained:
+                    (urgent if job.prio == URGENT else pending).append(job)
             self._cond.notify_all()
+        # never cancel URGENT jobs: they are termination-save encodes, and a
+        # save_urgent racing the atexit shutdown must still reach its
+        # COMMITTED rename. Drain them inline (lane FIFO order) on this
+        # thread; only periodic/restore work is discarded.
+        for job in sorted(urgent, key=lambda j: j.seq):
+            self._run(job)
         for job in pending:
             job.future.cancel()
         if wait:
@@ -275,6 +295,19 @@ def scheduler() -> CodecScheduler:
 
 def lane(priority: int) -> CodecLane:
     return CodecLane(scheduler(), priority)
+
+
+def _reset_for_tests() -> None:
+    """Tear down the process-wide scheduler so the next ``scheduler()``
+    call builds a fresh one. Test-only: regression tests for the
+    shutdown/teardown races need to shut the global instance down and then
+    restore a working scheduler for the rest of the suite."""
+    global _sched
+    with _sched_lock:
+        s, _sched = _sched, None
+    if s is not None:
+        atexit.unregister(s.shutdown)
+        s.shutdown(wait=True, timeout=5.0, cancel_pending=True)
 
 
 def maybe_yield() -> int:

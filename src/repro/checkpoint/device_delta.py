@@ -312,13 +312,21 @@ class DeviceDeltaTracker:
             return False
         with self._lock:
             ent = self._entries.get((name, 0))
-            if ent is not None and self._usable(ent, leaf, codec):
-                fp, diff = fingerprint_diff(leaf, ent.fp,
-                                            block_bytes=self.chunk_size)
-                _copy_to_host_async(diff)
-            else:
-                fp, diff, ent = fingerprint_blocks(
-                    leaf, block_bytes=self.chunk_size), None, None
+        # fingerprint dispatch runs OUTSIDE the tracker lock: the same lock
+        # serializes the async writer's commit bookkeeping, and a commit
+        # callback queued behind a device kernel dispatch would stall the
+        # writer thread (and anything waiting on it) for no correctness
+        # gain — _Entry values are never mutated in place, and begin()'s
+        # `pend.ent is ent` guard already discards a diff whose entry was
+        # swapped by a commit that landed in between
+        if ent is not None and self._usable(ent, leaf, codec):
+            fp, diff = fingerprint_diff(leaf, ent.fp,
+                                        block_bytes=self.chunk_size)
+            _copy_to_host_async(diff)
+        else:
+            fp, diff, ent = fingerprint_blocks(
+                leaf, block_bytes=self.chunk_size), None, None
+        with self._lock:
             self._pending[name] = _Pending(leaf=leaf, fp=fp, diff=diff,
                                            ent=ent)
         return True
@@ -350,6 +358,14 @@ class DeviceDeltaTracker:
         """
         staged: dict[str, _Staged] = {}
         new_fps: dict[str, tuple[Any, str]] = {}   # name -> (fp_dev, codec)
+        # decision pass under the lock (snapshot the entry + consume the
+        # pending prestage for each leaf), device dispatch outside it: the
+        # lock also serializes the async writer's commit bookkeeping, and
+        # holding it across fingerprint kernel dispatches would queue the
+        # writer thread behind device work. Safe because _Entry values are
+        # never mutated in place and the `pend.ent is ent` identity check
+        # below rejects any diff whose entry a concurrent commit swapped.
+        plan: list[tuple] = []
         with self._lock:
             for name, leaf in named.items():
                 codec = self._codec_for(name, leaf)
@@ -357,30 +373,35 @@ class DeviceDeltaTracker:
                     continue
                 pend = self._pending.pop(name, None)
                 ent = self._entries.get((name, 0))
-                usable = ent is not None and self._usable(ent, leaf, codec)
-                if pend is not None and pend.leaf is leaf:
-                    fp = pend.fp
-                    # the prestaged diff is only valid against the entry it
-                    # was computed from; if an async commit swapped the
-                    # entry in between, recompute below against the new one
-                    diff = pend.diff if pend.ent is ent else None
-                elif usable:
-                    fp, diff = fingerprint_diff(leaf, ent.fp,
-                                                block_bytes=self.chunk_size)
-                    _copy_to_host_async(diff)
-                else:
-                    fp, diff = fingerprint_blocks(
-                        leaf, block_bytes=self.chunk_size), None
-                new_fps[name] = (fp, codec)
-                if not usable:
-                    if ent is not None:
-                        self.stats["fallbacks"] += 1
-                    continue                       # dense path this save
-                if diff is None:
-                    diff = fp != ent.fp
-                    _copy_to_host_async(diff)
-                staged[name] = _Staged(self, name, leaf, ent, fp, diff, codec)
+                plan.append((name, leaf, codec, ent, pend))
             self._pending.clear()                  # saves never interleave
+        fallbacks = 0
+        for name, leaf, codec, ent, pend in plan:
+            usable = ent is not None and self._usable(ent, leaf, codec)
+            if pend is not None and pend.leaf is leaf:
+                fp = pend.fp
+                # the prestaged diff is only valid against the entry it
+                # was computed from; if an async commit swapped the
+                # entry in between, recompute below against the new one
+                diff = pend.diff if pend.ent is ent else None
+            elif usable:
+                fp, diff = fingerprint_diff(leaf, ent.fp,
+                                            block_bytes=self.chunk_size)
+                _copy_to_host_async(diff)
+            else:
+                fp, diff = fingerprint_blocks(
+                    leaf, block_bytes=self.chunk_size), None
+            new_fps[name] = (fp, codec)
+            if not usable:
+                if ent is not None:
+                    fallbacks += 1
+                continue                           # dense path this save
+            if diff is None:
+                diff = fp != ent.fp
+                _copy_to_host_async(diff)
+            staged[name] = _Staged(self, name, leaf, ent, fp, diff, codec)
+        with self._lock:
+            self.stats["fallbacks"] += fallbacks
             if staged:
                 self.stats["tracked_saves"] += 1
         return staged, self._make_commit_cb(new_fps)

@@ -112,7 +112,7 @@ def write_manifest(dirpath: str, manifest: Manifest) -> None:
         f.write(json.dumps(manifest.to_json(), separators=(",", ":")))
         f.flush()
         os.fsync(f.fileno())
-    os.replace(tmp, path)
+    os.replace(tmp, path)  # spotlint: ignore[SPOT002]
     # no directory fsync here: the step dir keeps its inode through the
     # stage->final rename, so the single fsync_dir in mark_committed
     # persists this entry and the COMMITTED entry together — and COMMITTED

@@ -341,7 +341,10 @@ def encode_tensor(
     is skipped, ``logical_dtype`` records the original dtype, and the on-disk
     bytes are identical to a host-side quantize of the same values.
     """
-    arr = np.asarray(arr)
+    # `arr` is snapshot-owned: to_host froze (copied) it at the snapshot
+    # boundary, so this asarray is a no-op normalization, not an alias of
+    # live training state
+    arr = np.asarray(arr)  # spotlint: ignore[SPOT021]
     codec = resolve_codec(codec)
     gshape = tuple(global_shape if global_shape is not None else arr.shape)
     idx = tuple(index if index is not None else tuple((0, s) for s in arr.shape))
@@ -392,9 +395,9 @@ class ShardFileReader:
     to one buffered read of the whole file where mmap is unavailable.
     """
 
-    def __init__(self, path):
+    def __init__(self, path: "str | os.PathLike[str]") -> None:
         self.path = path
-        self._buf = mmap_view(str(path))
+        self._buf: memoryview | None = mmap_view(str(path))
         if bytes(self._buf[:len(MAGIC)]) != MAGIC:
             magic = bytes(self._buf[:len(MAGIC)])
             release_view(self._buf)
@@ -413,6 +416,8 @@ class ShardFileReader:
         return list(self.records)
 
     def _payload_view(self, rec: TensorRecord) -> memoryview:
+        if self._buf is None:
+            raise ValueError(f"{self.path}: reader is closed")
         start = self._payload_start + rec.offset
         buf = self._buf[start:start + rec.nbytes]
         if zlib.crc32(buf) != rec.crc32:
@@ -490,7 +495,9 @@ def default_codec_for(name: str, arr: np.ndarray, *, compress: bool,
     beyond-paper optimization that shrinks termination checkpoints so they fit
     inside the eviction-notice window. Params and scalars stay exact.
     """
-    arr = np.asarray(arr)
+    # metadata-only inspection (dtype/nbytes/ndim); the buffer is not
+    # retained, so aliasing is harmless here
+    arr = np.asarray(arr)  # spotlint: ignore[SPOT021]
     return codec_for_meta(name, arr.dtype, arr.nbytes, ndim=arr.ndim,
                           compress=compress, quantize_moments=quantize_moments)
 

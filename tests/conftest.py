@@ -2,6 +2,8 @@
 tests and benches must see the real single CPU device. Multi-device sharding
 tests spawn subprocesses with their own XLA_FLAGS (test_sharded_elastic.py)."""
 
+import os
+
 import numpy as np
 import pytest
 
@@ -9,3 +11,30 @@ import pytest
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)
+
+
+def pytest_configure(config):
+    # Opt-in runtime lock-order witness (SPOTON_LOCK_WITNESS=1): instruments
+    # threading.Lock/RLock/Condition created from repro code for the whole
+    # session. Installed here, before test modules import repro, so even
+    # module-level locks (codec_sched._sched_lock, ...) are witnessed.
+    if os.environ.get("SPOTON_LOCK_WITNESS"):
+        from repro.analysis.lock_witness import install_from_env
+
+        install_from_env()
+
+
+def pytest_sessionfinish(session, exitstatus):
+    if not os.environ.get("SPOTON_LOCK_WITNESS"):
+        return
+    from repro.analysis.lock_witness import active, uninstall
+
+    if not active():
+        return
+    inversions = uninstall()
+    if inversions:
+        print(f"\nlock-order witness: {len(inversions)} inversion(s) "
+              f"observed during this run:\n")
+        for inv in inversions:
+            print(inv + "\n")
+        session.exitstatus = 1

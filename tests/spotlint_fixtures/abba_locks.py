@@ -1,0 +1,48 @@
+"""Seeded violations: lock discipline — ABBA cycle (SPOT030) and blocking
+IO under a lock (SPOT031)."""
+
+import os
+import threading
+
+LOCK_A = threading.Lock()
+LOCK_B = threading.Lock()
+LOCK_C = threading.Lock()
+LOCK_D = threading.Lock()
+
+
+def path_one():
+    with LOCK_A:
+        with LOCK_B:  # SPOTLINT-EXPECT: SPOT030
+            pass
+
+
+def path_two():
+    with LOCK_B:
+        with LOCK_A:
+            pass
+
+
+def ordered_one():
+    """Clean twin: both paths take C before D — no cycle."""
+    with LOCK_C:
+        with LOCK_D:
+            pass
+
+
+def ordered_two():
+    with LOCK_C:
+        with LOCK_D:
+            pass
+
+
+def fsync_under_lock(fd):
+    with LOCK_C:
+        os.fsync(fd)  # SPOTLINT-EXPECT: SPOT031
+
+
+def fsync_outside_lock(state, fd):
+    """Clean twin: snapshot under the lock, do the IO outside it."""
+    with LOCK_C:
+        pending = list(state)
+    os.fsync(fd)
+    return pending

@@ -1,0 +1,42 @@
+"""Seeded violations: zero-copy view lifetimes (SPOT020)."""
+
+GLOBAL_VIEW = mmap_view("/tmp/pool-chunk")  # noqa: F821  # SPOTLINT-EXPECT: SPOT020
+
+
+class LeakyHolder:
+    """Stores a view on self with no close() — escapes every release
+    scope."""
+
+    def __init__(self, path):
+        self.buf = mmap_view(path)  # noqa: F821  # SPOTLINT-EXPECT: SPOT020
+
+
+class OwnedHolder:
+    """Clean twin: the class owns the mapping's lifetime via close()."""
+
+    def __init__(self, path):
+        self.buf = mmap_view(path)  # noqa: F821
+
+    def close(self):
+        release_view(self.buf)  # noqa: F821
+
+
+def leak_local(pool, ref):
+    view = pool.read_view(ref)  # SPOTLINT-EXPECT: SPOT020
+    n = len(view)
+    return n
+
+
+def read_released(pool, ref):
+    """Clean twin: release in a finally block."""
+    view = pool.read_view(ref)
+    try:
+        return bytes(view)
+    finally:
+        release_view(view)  # noqa: F821
+
+
+def read_transfer_ownership(pool, ref):
+    """Clean twin: returning the view transfers the release obligation."""
+    view = pool.read_view(ref)
+    return view

@@ -1,0 +1,34 @@
+"""Seeded violations: restore-lane routing (SPOT011) and missing
+chunk-loop yields (SPOT012)."""
+
+
+def decode_chunk(c):
+    return c
+
+
+def restore_blocks_wrong_lane(chunks):
+    ex = codec_executor()  # noqa: F821 — lexical fixture
+    return [ex.submit(decode_chunk, c) for c in chunks]  # SPOTLINT-EXPECT: SPOT011
+
+
+def restore_blocks_ok(chunks):
+    """Clean twin: MTTR-window work on the RESTORE lane."""
+    ex = restore_executor()  # noqa: F821
+    return [ex.submit(decode_chunk, c) for c in chunks]
+
+
+def encode_loop_no_yield(pool, chunks):
+    refs = []
+    for c in chunks:  # SPOTLINT-EXPECT: SPOT012
+        refs.append(store_chunk(pool, c))  # noqa: F821
+    return refs
+
+
+def encode_loop_ok(pool, chunks):
+    """Clean twin: yields its worker to queued restore/urgent jobs
+    between chunks."""
+    refs = []
+    for c in chunks:
+        maybe_yield()  # noqa: F821
+        refs.append(store_chunk(pool, c))  # noqa: F821
+    return refs

@@ -1,0 +1,24 @@
+"""Seeded violations: non-copied numpy snapshot leaves (SPOT021).
+
+SPOT021 is scoped to repro.checkpoint.* — the test copies this file into a
+scratch src/repro/checkpoint/ tree before analyzing it.
+"""
+
+import numpy as np
+
+
+def extract_aliasing(leaf):
+    return np.asarray(leaf)  # SPOTLINT-EXPECT: SPOT021
+
+
+def extract_frozen(leaf):
+    """Clean twin: the to_host idiom — numpy leaves are copied, asarray is
+    only the jax/sequence branch."""
+    if isinstance(leaf, np.ndarray):
+        return leaf.copy()
+    return np.asarray(leaf)
+
+
+def scale_scalar(dev_scale):
+    """Clean twin: float() conversion keeps no buffer, nothing aliases."""
+    return float(np.asarray(dev_scale))

@@ -1,0 +1,35 @@
+"""Seeded violations: crash-consistency family (SPOT001/SPOT002)."""
+
+import os
+
+
+def commit_no_fsync_at_all(tmp, final):
+    with open(tmp, "w") as f:
+        f.write("data")
+    os.replace(tmp, final)  # SPOTLINT-EXPECT: SPOT001,SPOT002
+
+
+def commit_fsync_but_no_dirsync(tmp, final):
+    with open(tmp, "w") as f:
+        f.write("data")
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, final)  # SPOTLINT-EXPECT: SPOT002
+
+
+def commit_durably(tmp, final):
+    """Clean twin: full fsync -> rename -> dir-fsync protocol."""
+    with open(tmp, "w") as f:
+        f.write("data")
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, final)
+    fsync_dir(os.path.dirname(final))  # noqa: F821 — lexical fixture
+
+
+def commit_via_blessed_helper(stage, final, manifest):
+    """Clean twin: write_manifest fsyncs the data, mark_committed fsyncs
+    file + dir — the store's real commit shape."""
+    write_manifest(stage, manifest)  # noqa: F821
+    os.replace(stage, final)
+    mark_committed(final)  # noqa: F821

@@ -1,0 +1,46 @@
+"""Seeded violations: lane discipline, same-lane blocking (SPOT010)."""
+
+
+def encode_chunk(b):
+    return b
+
+
+def encode_piece_deadlock(data):
+    """Runs on the PERIODIC lane (submitted below) and blocks on a future
+    it submitted to its own lane — classic lane self-deadlock."""
+    ex = codec_executor()  # noqa: F821 — lexical fixture
+    fut = ex.submit(encode_chunk, data)
+    return fut.result()  # SPOTLINT-EXPECT: SPOT010
+
+
+def encode_piece_batch_deadlock(pieces):
+    """Same via the futures-list + wait idiom."""
+    ex = codec_executor()  # noqa: F821
+    futs = []
+    for p in pieces:
+        futs.append(ex.submit(encode_chunk, p))
+    futures_wait(futs)  # noqa: F821  # SPOTLINT-EXPECT: SPOT010
+    return futs
+
+
+def kick(data, pieces):
+    codec_executor().submit(encode_piece_deadlock, data)  # noqa: F821
+    codec_executor().submit(encode_piece_batch_deadlock, pieces)  # noqa: F821
+
+
+def encode_piece_ok(data):
+    """Clean twin: submitted to PERIODIC but blocks only on strictly
+    higher-priority (URGENT) work, which can always run."""
+    fut = urgent_executor().submit(encode_chunk, data)  # noqa: F821
+    return fut.result()
+
+
+def kick_ok(data):
+    codec_executor().submit(encode_piece_ok, data)  # noqa: F821
+
+
+def toplevel_waiter(data):
+    """Clean twin: never submitted as a lane job itself, so blocking on a
+    lane future is fine (this is what the trainer thread does)."""
+    fut = codec_executor().submit(encode_chunk, data)  # noqa: F821
+    return fut.result()

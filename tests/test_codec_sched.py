@@ -10,7 +10,7 @@ import pytest
 
 import jax
 
-from repro.checkpoint import CheckpointStore, codec_sched
+from repro.checkpoint import AsyncCheckpointer, CheckpointStore, codec_sched
 from repro.checkpoint.codec_sched import (PERIODIC, RESTORE, URGENT,
                                           CodecLane, CodecScheduler)
 from repro.core.clock import VirtualClock
@@ -182,6 +182,57 @@ class TestLifecycle:
         with pytest.raises(RuntimeError):
             s.submit(RESTORE, lambda: None)
 
+    def test_shutdown_drains_queued_urgent_jobs(self):
+        # cancel_pending must never cancel URGENT work: a termination save
+        # queued behind a running encode has to reach its COMMITTED rename.
+        s = sched1()
+        gate = threading.Event()
+        running = s.submit(PERIODIC, gate.wait, 5)
+        time.sleep(0.05)
+        urgent = s.submit(URGENT, lambda: "committed")
+        periodic = s.submit(PERIODIC, lambda: None)
+        s.shutdown(wait=False, cancel_pending=True)
+        assert urgent.result(timeout=1) == "committed"
+        assert periodic.cancelled()
+        gate.set()
+        running.result(timeout=5)
+        s.shutdown(wait=True, timeout=5)
+
+    def test_urgent_submit_after_shutdown_runs_inline(self):
+        # the atexit race: a transient save_urgent thread that loses the
+        # race with interpreter-shutdown must still get its job executed
+        # (inline, on the submitting thread) instead of a RuntimeError.
+        s = sched1()
+        s.shutdown(wait=True, timeout=5, cancel_pending=True)
+        fut = s.submit(URGENT, lambda: 7)
+        assert fut.done() and fut.result() == 7
+        with pytest.raises(RuntimeError):
+            s.submit(PERIODIC, lambda: None)
+
+    def test_urgent_save_after_global_shutdown_commits(self, tmp_path):
+        # End-to-end regression for the same race: simulate atexit having
+        # already shut the global scheduler down, then drive a termination
+        # save through AsyncCheckpointer — it must commit a manifest that
+        # restores bit-identically.
+        codec_sched._reset_for_tests()
+        try:
+            codec_sched.scheduler().shutdown(
+                wait=True, timeout=5.0, cancel_pending=True)
+            store = CheckpointStore(str(tmp_path), mode="delta")
+            ckpt = AsyncCheckpointer(store)
+            state = _state(3)
+            info = ckpt.save_urgent(3, state, timeout_s=60)
+            assert info is not None and info.step == 3
+            assert store.committed_steps() == [3]
+        finally:
+            codec_sched._reset_for_tests()
+        # verify on a fresh scheduler: the checkpoint written during
+        # teardown must restore bit-identically
+        got, man = store.restore(_template(state))
+        assert man.step == 3
+        for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(state)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
     def test_global_scheduler_is_singleton_and_lanes_share_it(self):
         a = codec_sched.scheduler()
         b = codec_sched.scheduler()
@@ -221,6 +272,7 @@ class TestContendedCorrectness:
     """Satellite: restore under an active writer into the same pool must be
     bit-identical, and a yielded periodic save must still commit."""
 
+    @pytest.mark.timeout(120)
     @pytest.mark.parametrize("mode", ["delta", "full"])
     def test_restore_bit_identical_under_concurrent_writer(self, tmp_path, mode):
         store = CheckpointStore(str(tmp_path / "a"), mode=mode, retention=100)
@@ -254,6 +306,7 @@ class TestContendedCorrectness:
             t.join(timeout=30)
         assert not errs
 
+    @pytest.mark.timeout(120)
     def test_yielded_periodic_save_commits_valid_manifest(self, tmp_path):
         """A periodic save whose encode workers yield to interleaved restores
         must still produce a COMMITTED manifest that restores exactly."""
