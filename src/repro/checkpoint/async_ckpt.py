@@ -82,8 +82,15 @@ class AsyncCheckpointer:
     def _raise_pending_error(self) -> None:
         with self._lock:
             err, self._last_error = self._last_error, None
-        if err is not None:
-            raise RuntimeError("async checkpoint write failed") from err
+        if err is None:
+            return
+        if not isinstance(err, Exception):
+            # a process-kill equivalent (torture harness SimulatedCrash,
+            # KeyboardInterrupt) observed on the writer thread: re-raise
+            # as itself — wrapping it in RuntimeError would downgrade a
+            # crash into a recoverable periodic-save failure
+            raise err
+        raise RuntimeError("async checkpoint write failed") from err
 
     # -- API -------------------------------------------------------------------
 
@@ -153,6 +160,8 @@ class AsyncCheckpointer:
             raise TimeoutError(
                 f"termination checkpoint at step {step} missed the notice window")
         if job.error is not None:
+            if not isinstance(job.error, Exception):
+                raise job.error  # process-kill equivalent: never downgrade
             raise RuntimeError("termination checkpoint failed") from job.error
         assert job.result is not None
         return job.result

@@ -63,8 +63,17 @@ import numpy as np
 
 from . import codec_sched
 from . import serialize as ser
+from ..faults import inject as faults
 from .codec_sched import CodecLane
 from .ioutil import array_bytes_view, fsync_dir, mmap_view, release_view
+
+
+def _retry():
+    # Deferred: repro.core's package __init__ imports the coordinator, which
+    # imports repro.checkpoint — a module-level import here would observe
+    # either package half-initialized depending on which is imported first.
+    from ..core import retry
+    return retry
 
 CHUNKS_DIRNAME = "chunks"
 DEFAULT_CHUNK_SIZE = 1 << 20          # 1 MiB: dedup granularity vs. ref count
@@ -193,11 +202,25 @@ class ChunkPool:
         dirpath = os.path.dirname(path)
         os.makedirs(dirpath, exist_ok=True)
         tmp = path + f".tmp-{uuid.uuid4().hex[:8]}"
-        with open(tmp, "wb") as f:
-            f.write(data)
-            f.flush()
-            os.fsync(f.fileno())
-        os.replace(tmp, path)       # atomic: readers never see partial chunks
+        try:
+            with open(tmp, "wb") as f:
+                faults.write_bytes(f, data, op="chunk.write", path=tmp)
+                f.flush()
+                faults.fault_point("chunk.fsync", tmp)
+                os.fsync(f.fileno())
+            faults.fault_point("chunk.replace", path)
+            os.replace(tmp, path)   # atomic: readers never see partial chunks
+        except Exception:
+            # Quarantine: a failed/short tmp must not survive to be mistaken
+            # for progress — the retrying caller re-encodes from memory. A
+            # SimulatedCrash is a BaseException and skips this on purpose:
+            # a killed process leaves its debris for gc to reclaim.
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+        faults.fault_point("chunk.replaced", path, rollback=(path, tmp))
         if sync_dir:
             fsync_dir(dirpath)      # durable: rename survives a crash
         return len(data)
@@ -207,6 +230,7 @@ class ChunkPool:
         platform allows — decode copies straight from the page cache).
         Release with ``ioutil.release_view`` when done."""
         path = self.path(ref.hash)
+        faults.fault_point("chunk.read", path)
         view = mmap_view(path)
         if not chunk_content_ok(ref, view, self):
             release_view(view)
@@ -345,7 +369,13 @@ def store_chunk(pool: ChunkPool, raw_chunk, *, comp: str,
     # stored-raw chunks share the raw digest — don't hash 2x
     h = rd if enc is raw_chunk else chunk_digest(enc)
     pin(h)
-    n = pool.write(h, enc, sync_dir=dirty_dirs is None)
+    # Transient write faults (EIO-class) retry with backoff; pool.write
+    # unlinks its quarantined tmp first, so each attempt re-lands the full
+    # encoded payload. ENOSPC and friends are persistent and surface
+    # immediately — the coordinator's degradation policy owns those.
+    n = _retry().call_with_retry(
+        lambda: pool.write(h, enc, sync_dir=dirty_dirs is None),
+        describe=f"chunk {h[:10]} write")
     if n and dirty_dirs is not None:
         dirty_dirs.add(os.path.dirname(pool.path(h)))
     ref = ChunkRef(hash=h, nbytes=len(enc), raw_len=len(raw_chunk),
@@ -376,6 +406,17 @@ def _readinto_full(f, window: memoryview) -> int:
 
 
 def _decode_chunk_into(pool: ChunkPool, ref: ChunkRef, window: memoryview) -> None:
+    """Retrying wrapper around one chunk decode: a transient read fault
+    (EIO on a flaky mount) re-reads with backoff; a content mismatch raises
+    immediately (``_heal_and_raise``'s IOError carries no errno) because the
+    bad entry has already been removed and only a re-save can help."""
+    _retry().call_with_retry(
+        lambda: _decode_chunk_into_once(pool, ref, window),
+        describe=f"chunk {ref.hash[:10]} read")
+
+
+def _decode_chunk_into_once(pool: ChunkPool, ref: ChunkRef,
+                            window: memoryview) -> None:
     """One chunk: pool file -> (crc check, decompress) -> destination window.
 
     Raw chunks ``readinto`` the preallocated tensor buffer directly — one
@@ -385,6 +426,7 @@ def _decode_chunk_into(pool: ChunkPool, ref: ChunkRef, window: memoryview) -> No
     overlap. Compressed chunks read once and decompress into the window
     (the codec output is the only intermediate)."""
     path = pool.path(ref.hash)
+    faults.fault_point("chunk.read", path)
     with open(path, "rb", buffering=0) as f:
         if os.fstat(f.fileno()).st_size != ref.nbytes:
             _heal_and_raise(path, ref, "size mismatch")

@@ -18,10 +18,17 @@ them and none owns them:
 
 from __future__ import annotations
 
+import errno
+import logging
 import mmap
 import os
+import threading
 
 import numpy as np
+
+from ..faults import inject as faults
+
+log = logging.getLogger(__name__)
 
 
 def array_bytes_view(arr: np.ndarray) -> memoryview:
@@ -38,6 +45,7 @@ def mmap_view(path: str) -> memoryview:
     """Read-only view of a whole file: mmap-backed when possible, else a
     plain read. The returned memoryview keeps its backing object (mmap or
     bytes) alive; pass it to ``release_view`` for deterministic teardown."""
+    faults.fault_point("file.mmap", path)
     with open(path, "rb") as f:
         try:
             return memoryview(mmap.mmap(f.fileno(), 0, access=mmap.ACCESS_READ))
@@ -60,20 +68,49 @@ def release_view(view: memoryview) -> None:
             pass  # a live payload view still exports this mapping
 
 
+# Filesystems that cannot fsync a directory fd report one of these; the
+# rename is as durable as that mount can make it, so warn once and move on.
+_FSYNC_UNSUPPORTED = frozenset(e for e in (
+    errno.EINVAL,
+    getattr(errno, "ENOTSUP", None),
+    getattr(errno, "EOPNOTSUPP", None),
+    errno.ENOSYS,
+    errno.EBADF,
+) if e is not None)
+
+_fsync_warn_lock = threading.Lock()
+_fsync_warned = False
+
+
 def fsync_dir(path: str) -> None:
     """fsync a directory so renames/creates inside it survive a crash.
 
-    Best-effort: directories aren't opendable for fsync on every platform
-    (or may race with a concurrent sweep), and losing the *durability* of a
-    rename is strictly better than failing the save that performed it.
+    Tolerant of filesystems that cannot fsync a directory fd (EINVAL /
+    ENOTSUP / ENOSYS — common on overlayfs and some network mounts): those
+    warn once per process and return, since the mount offers no stronger
+    durability anyway. A *real* IO failure (EIO and friends) propagates —
+    the rename's durability was genuinely lost and the commit must not be
+    reported as durable.
     """
+    global _fsync_warned
+    faults.fault_point("dir.fsync", path)
     try:
         fd = os.open(path, os.O_RDONLY)
     except OSError:
-        return
+        return  # directory vanished (concurrent sweep) or not opendable
     try:
         os.fsync(fd)
-    except OSError:
-        pass
+    except OSError as exc:
+        if exc.errno in _FSYNC_UNSUPPORTED:
+            with _fsync_warn_lock:
+                if not _fsync_warned:
+                    _fsync_warned = True
+                    log.warning(
+                        "directory fsync unsupported on this filesystem "
+                        "(%s for %s); renames are only as durable as the "
+                        "mount allows", errno.errorcode.get(exc.errno or 0,
+                                                            exc.errno), path)
+            return
+        raise
     finally:
         os.close(fd)

@@ -25,6 +25,7 @@ import time
 from dataclasses import dataclass, field
 from typing import Any
 
+from ..faults import inject as faults
 from .ioutil import fsync_dir
 
 MANIFEST_NAME = "manifest.json"
@@ -109,10 +110,14 @@ def write_manifest(dirpath: str, manifest: Manifest) -> None:
         # refs and the encode sits on every save's commit path — measured
         # ~16 ms -> ~2 ms on the 16 MiB / 64 KiB-chunk fixture. Compact
         # separators also shrink the file ~10%.
-        f.write(json.dumps(manifest.to_json(), separators=(",", ":")))
+        faults.write_bytes(
+            f, json.dumps(manifest.to_json(), separators=(",", ":")),
+            op="manifest.write", path=tmp)
         f.flush()
         os.fsync(f.fileno())
+    faults.fault_point("manifest.replace", path)
     os.replace(tmp, path)  # spotlint: ignore[SPOT002]
+    faults.fault_point("manifest.replaced", path, rollback=(path, tmp))
     # no directory fsync here: the step dir keeps its inode through the
     # stage->final rename, so the single fsync_dir in mark_committed
     # persists this entry and the COMMITTED entry together — and COMMITTED
@@ -129,7 +134,7 @@ def read_manifest(dirpath: str) -> Manifest:
 def mark_committed(dirpath: str) -> None:
     path = os.path.join(dirpath, COMMIT_MARKER)
     with open(path, "w") as f:
-        f.write(f"{time.time()}\n")
+        faults.write_bytes(f, f"{time.time()}\n", op="marker.write", path=path)
         f.flush()
         os.fsync(f.fileno())
     # one dir fsync persists the COMMITTED entry *and* the manifest entry

@@ -43,6 +43,7 @@ from typing import Any, Callable, Iterable, Sequence
 
 import numpy as np
 
+from ..faults import inject as faults
 from .ioutil import array_bytes_view, mmap_view, release_view
 
 try:  # optional: zstd beats zlib on ratio+speed, but zlib always exists
@@ -380,7 +381,7 @@ def write_shard_file(path, tensors: Iterable[PendingTensor]) -> list[TensorRecor
         f.write(_U32.pack(len(header)))
         f.write(header)
         for t in tensors:
-            f.write(t.payload)
+            faults.write_bytes(f, t.payload, op="shard.write", path=str(path))
         f.flush()
         os.fsync(f.fileno())
     return records

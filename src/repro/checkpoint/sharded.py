@@ -364,8 +364,14 @@ def write_snapshot_delta(
     if dirty_dirs:
         # one fsync per distinct dirty fan-out dir, overlapped on the
         # executor — every new chunk's rename is durable before the caller
-        # commits a manifest that references it
-        futures_wait([ex.submit(fsync_dir, d) for d in dirty_dirs])
+        # commits a manifest that references it. The results must be
+        # collected: an fsync that failed with a real IO error means a
+        # referenced chunk's rename may not survive a crash, and committing
+        # a manifest over it would claim durability the disk refused.
+        sync_futs = [ex.submit(fsync_dir, d) for d in dirty_dirs]
+        futures_wait(sync_futs)
+        for sf in sync_futs:
+            sf.result()
     records = []
     new_bytes = 0
     for (name, pi, idx, lp, arr, fut), res in zip(jobs, results):

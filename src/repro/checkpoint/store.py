@@ -37,6 +37,7 @@ from typing import Any, Callable
 from . import chunkstore
 from . import manifest as mf
 from . import sharded
+from ..faults import inject as faults
 from .ioutil import fsync_dir
 
 
@@ -99,8 +100,15 @@ class CheckpointStore:
         # merged under every manifest's extras; per-save extras win on clash.
         self.tags = dict(tags or {})
         # test hook: called between commit phases; raising simulates a writer
-        # killed mid-eviction at that phase.
+        # killed mid-eviction at that phase. The seedable FaultPlan layer
+        # (repro.faults) hits the same phases as "commit.<phase>" ops plus
+        # every primitive IO op underneath them.
         self.fault_injector = fault_injector or (lambda phase: None)
+        # embedded in this store's staging dir names: gc can reclaim a dead
+        # same-token stage immediately (same process, not in the in-flight
+        # set => its writer is gone), while foreign debris on the shared
+        # volume stays age-gated.
+        self._stage_token = uuid.uuid4().hex[:6]
         # staging dirs with a writer currently inside them (fleet: N async
         # writers share one store) — gc must never sweep these
         self._stage_lock = threading.Lock()
@@ -128,16 +136,23 @@ class CheckpointStore:
                 if self._pinned_chunks[h] <= 0:
                     del self._pinned_chunks[h]
 
+    def _phase(self, name: str) -> None:
+        """One commit-phase boundary: the legacy per-store injector hook and
+        the process-wide FaultPlan layer both see it."""
+        self.fault_injector(name)
+        faults.fault_point("commit." + name)
+
     def save_snapshot(self, snapshot: sharded.Snapshot, *, kind: str = "transparent",
                       extra: dict | None = None) -> CheckpointInfo:
         t0 = self.time_fn()
         final = os.path.join(self.root, mf.step_dirname(snapshot.step))
-        stage = final + f".tmp-{uuid.uuid4().hex[:8]}"
+        stage = final + f".tmp-{self._stage_token}-{uuid.uuid4().hex[:8]}"
         os.makedirs(stage, exist_ok=True)
         with self._stage_lock:
             self._inflight_stages.add(stage)
         pinned: list[str] = []
         try:
+            self._phase("staged")
             if self.mode == "delta":
                 # dirty chunks land in the shared pool (atomic, idempotent
                 # per chunk); the step dir itself holds only the manifest, so
@@ -158,7 +173,7 @@ class CheckpointStore:
                     stage, snapshot, compress=self.compress,
                     quantize_moments=self.quantize_moments)
                 new_bytes = sum(r["nbytes"] for r in records)
-            self.fault_injector("shards_written")
+            self._phase("shards_written")
             man = mf.Manifest(
                 step=snapshot.step, kind=kind, created_at=self.time_fn(),
                 tensors=records, leaf_order=snapshot.leaf_order,
@@ -167,7 +182,7 @@ class CheckpointStore:
                 format_version=2 if self.mode == "delta" else 1,
                 chunk_size=self.chunk_size if self.mode == "delta" else None)
             mf.write_manifest(stage, man)
-            self.fault_injector("manifest_written")
+            self._phase("manifest_written")
             we_committed = False
             # The commit-phase IO below (rmtree/replace/mark_committed/root
             # fsync join) intentionally runs under _commit_lock and is
@@ -187,7 +202,10 @@ class CheckpointStore:
                 else:
                     if os.path.exists(final):  # uncommitted leftover: replace
                         shutil.rmtree(final)
+                    faults.fault_point("store.replace", final)
                     os.replace(stage, final)
+                    faults.fault_point("store.replaced", final,
+                                       rollback=(final, stage))
                     # durable, not just atomic: sync the root so a crash
                     # right after the rename can't roll the step dir back.
                     # The root fsync overlaps the marker write — they are
@@ -205,7 +223,7 @@ class CheckpointStore:
                         # cannot be skipped, fsync inline instead
                         fsync_dir(self.root)
                         root_sync = None
-                    self.fault_injector("renamed")
+                    self._phase("renamed")
                     try:
                         mf.mark_committed(final)
                     finally:
@@ -218,6 +236,7 @@ class CheckpointStore:
                                 # COMMITTED must imply rename durability
                                 fsync_dir(self.root)
                     we_committed = True
+                    self._phase("committed")
         except BaseException:
             # leave staging dir for post-mortem; it is invisible to readers
             raise
@@ -341,20 +360,28 @@ class CheckpointStore:
                           ignore_errors=True)
         # sweep dead staging dirs — but never one a live writer is inside
         # (this process: tracked set; another host on the shared volume:
-        # age-gated by real mtime, an eviction notice is seconds not hours)
+        # age-gated by real mtime, an eviction notice is seconds not hours).
+        # A stage carrying *this store's* token that is not in the in-flight
+        # set is debris from one of our own aborted commits — its writer
+        # already unwound through save_snapshot's finally — so it is
+        # reclaimed immediately, no age gate: this is how the save after a
+        # crash-point abort self-heals the previous attempt's leftovers.
         with self._stage_lock:
             inflight = set(self._inflight_stages)
+        own_marker = f".tmp-{self._stage_token}-"
         for d in os.listdir(self.root):
             if ".tmp-" not in d:
                 continue
             path = os.path.join(self.root, d)
             if path in inflight:
                 continue
-            try:
-                if time.time() - os.path.getmtime(path) < stale_staging_age_s:
-                    continue
-            except OSError:
-                pass  # already gone (or unreadable): try the sweep anyway
+            if own_marker not in d:
+                try:
+                    if (time.time() - os.path.getmtime(path)
+                            < stale_staging_age_s):
+                        continue
+                except OSError:
+                    pass  # already gone (or unreadable): try the sweep anyway
             shutil.rmtree(path, ignore_errors=True)
         due = time.time() - self._last_chunk_sweep >= self.chunk_sweep_interval_s
         if sweep_chunks or (sweep_chunks is None and doomed and due):

@@ -46,6 +46,7 @@ streaming disk→device pipeline, which is what the fast-resume benchmark
 from __future__ import annotations
 
 import enum
+import errno
 import logging
 import time as _time
 from collections import deque
@@ -56,6 +57,8 @@ from ..checkpoint import codec_sched
 from ..checkpoint.async_ckpt import AsyncCheckpointer
 from ..checkpoint.sharded import Snapshot, extract_snapshot, prestage
 from ..checkpoint.store import CheckpointStore
+from ..faults import inject as fault_inject
+from . import retry
 from .clock import Clock, VirtualClock
 from .ledger import TimeLedger, TimeModel  # noqa: F401  (TimeModel re-export)
 from .policy import CheckpointPolicy, Mode
@@ -63,6 +66,24 @@ from .providers import (CloudProvider, PreemptNotice, PREEMPT_KIND,
                         REBALANCE_KIND, get_provider)
 
 log = logging.getLogger("spoton")
+
+# storage faults that describe a state (full/read-only/dead disk) rather
+# than an event: a save failing with one of these enters the degradation
+# window. EIO is included because the IO layer's bounded retries already
+# ran — an EIO surfacing here is persistent by construction.
+_STORAGE_FAULT_ERRNOS = frozenset(retry.PERSISTENT_ERRNOS) | {errno.EIO}
+
+
+def _storage_fault(exc: BaseException | None) -> bool:
+    """True when ``exc`` (or any chained cause — async failures arrive
+    wrapped in RuntimeError) is a persistent storage-level fault."""
+    seen = 0
+    while exc is not None and seen < 8:
+        if isinstance(exc, OSError) and exc.errno in _STORAGE_FAULT_ERRNOS:
+            return True
+        exc = exc.__cause__ or exc.__context__
+        seen += 1
+    return False
 
 
 class Signal(enum.Enum):
@@ -133,6 +154,17 @@ class CoordinatorStats:
     # times a periodic-save encode handed its worker to a higher-priority
     # job at a chunk boundary (cooperative preemption)
     save_yields: int = 0
+    # robustness counters (process-wide deltas folded per coordinator, like
+    # save_yields): bounded-retry attempts the IO layer burned on transient
+    # faults, faults the torture layer injected (0 outside torture runs),
+    # and periodic saves skipped-and-alerted while storage was degraded
+    # (ENOSPC / persistent EIO) — urgent saves keep committing through it
+    io_retries: int = 0
+    faults_injected: int = 0
+    saves_degraded: int = 0
+    # consecutive-failure count of the metadata poll at its worst — how
+    # close the coordinator came to assuming eviction blind
+    poll_failures: int = 0
     # MTTR: eviction (detach) → first training step completed on the
     # replacement. Covers provisioning, restore, recompilation and data
     # fast-forward — the full window the fast-resume pipeline minimizes.
@@ -189,6 +221,22 @@ class SpotOnCoordinator:
         # last-seen global yield count (the scheduler counter is
         # process-wide and monotonic; we fold deltas)
         self._seen_yields = codec_sched.snapshot_stats()["yields"]
+        # same delta-folding for the retry layer's and fault injector's
+        # process-wide counters
+        self._seen_io_retries = retry.snapshot_stats()["io_retries"]
+        self._seen_faults = fault_inject.snapshot_stats()["faults_injected"]
+        # storage degradation: while set, periodic saves skip-and-alert
+        # until the cooldown passes (urgent saves ignore it — the notice
+        # window is always worth attempting). Capped so fleet members,
+        # whose own periodic cadence is disabled (interval=inf, the fleet
+        # drives saves), still re-probe storage eventually.
+        self.degraded_cooldown_s = min(2.0 * policy.periodic_interval_s, 300.0)
+        self._degraded_until: float | None = None
+        # metadata-poll degradation: after this many consecutive failed
+        # polls (each already retried with backoff), assume the instance is
+        # evictable and checkpoint proactively instead of flying blind
+        self.assume_evictable_after = 3
+        self._poll_fail_streak = 0
 
     @property
     def time_model(self) -> TimeModel | None:
@@ -255,14 +303,46 @@ class SpotOnCoordinator:
             self._seen_yields = yields
             self.stats.save_yields += delta
             self.ledger.count("save_yields", delta)
+        io_retries = retry.snapshot_stats()["io_retries"]
+        delta = io_retries - self._seen_io_retries
+        if delta > 0:
+            self._seen_io_retries = io_retries
+            self.stats.io_retries += delta
+            self.ledger.count("io_retries", delta)
+        injected = fault_inject.snapshot_stats()["faults_injected"]
+        delta = injected - self._seen_faults
+        if delta > 0:
+            self._seen_faults = injected
+            self.stats.faults_injected += delta
+            self.ledger.count("faults_injected", delta)
         if self._async is None:
             return
         for info in self._async.drain_completed():
             if info.kind != "termination":
                 self.stats.ckpt_bytes_written += info.new_bytes
 
+    def _mark_degraded(self, e: BaseException) -> None:
+        self.stats.saves_degraded += 1
+        self.ledger.count("saves_degraded", 1)
+        self._degraded_until = self.clock.now() + self.degraded_cooldown_s
+        log.warning(
+            "storage degraded (%s): periodic checkpoints skip-and-alert "
+            "for %.0fs; urgent saves still attempt", e,
+            self.degraded_cooldown_s)
+
     def _save_periodic(self, step: int, state, *, stat: str = "periodic") -> bool:
         t0 = self.clock.now()
+        if self._degraded_until is not None:
+            if t0 < self._degraded_until:
+                # skip-and-alert: storage said "full/broken" recently enough
+                # that re-encoding the full state would only burn compute.
+                # The committed history is intact; count the skip so run
+                # reports surface the degradation window.
+                self.stats.saves_degraded += 1
+                self.ledger.count("saves_degraded", 1)
+                self._last_periodic_at = t0
+                return False
+            self._degraded_until = None  # cooldown over: probe storage again
         # prestage at decision time: with the tracker, fingerprint + diff
         # kernels dispatch now (dirty-block gather instead of full DMAs);
         # without it, the device→host copies start before extract gathers
@@ -290,6 +370,11 @@ class SpotOnCoordinator:
             log.warning("periodic checkpoint failed: %s", e)
             self.stats.periodic_failures += 1
             self._last_periodic_at = self.clock.now()
+            if _storage_fault(e):
+                # ENOSPC/EDQUOT/EROFS, or EIO that already exhausted the IO
+                # layer's bounded retries: a *state*, not an event — enter
+                # the skip-and-alert window instead of re-failing each tick
+                self._mark_degraded(e)
             return False
         self._account_extract(snap)
         # the extract leg is charged on the bytes that actually crossed the
@@ -380,8 +465,41 @@ class SpotOnCoordinator:
         if self._metadata is None or now - self._last_poll_at < self.policy.poll_interval_s:
             return None, None
         self._last_poll_at = now
+        try:
+            # bounded retry with jittered backoff around the endpoint read;
+            # clock.sleep keeps the backoff fake-clock-testable (and charged
+            # in virtual-time worlds, where waiting is never free)
+            notices = retry.call_with_retry(
+                lambda: self.provider.poll_once(
+                    self._metadata, self._instance_name or "", now),
+                policy=retry.POLL_RETRY,
+                classify=lambda e: (retry.is_transient(e)
+                                    or isinstance(e, TimeoutError)),
+                sleep=self.clock.sleep,
+                describe=f"{self.provider.name} metadata poll")
+        except Exception as e:
+            # a notice endpoint that stays down is indistinguishable from an
+            # eviction about to happen: degrade conservatively rather than
+            # crash the coordinator or fly blind
+            self._poll_fail_streak += 1
+            self.stats.poll_failures = max(self.stats.poll_failures,
+                                           self._poll_fail_streak)
+            self.ledger.count("poll_failures", 1)
+            log.warning("metadata poll failed (%d consecutive): %s",
+                        self._poll_fail_streak, e)
+            if self._poll_fail_streak % self.assume_evictable_after == 0:
+                synthetic = PreemptNotice(
+                    event_id=f"assume-evictable-{self._poll_fail_streak}",
+                    deadline=now + self.provider.notice_s,
+                    kind=REBALANCE_KIND,
+                    raw={"reason": "metadata endpoint unreachable"})
+                log.warning("assuming evictable after %d failed polls: "
+                            "proactive checkpoint", self._poll_fail_streak)
+                return None, synthetic
+            return None, None
+        self._poll_fail_streak = 0
         preempt = rebalance = None
-        for n in self.provider.poll(self._metadata, self._instance_name, now):
+        for n in notices:
             if n.event_id in self._handled_notices:
                 continue
             if n.kind == PREEMPT_KIND and preempt is None:
@@ -481,6 +599,8 @@ class SpotOnCoordinator:
             except RuntimeError as e:
                 log.warning("async checkpoint write failed at flush: %s", e)
                 self.stats.periodic_failures += 1
+                if _storage_fault(e):
+                    self._mark_degraded(e)
             self._drain_async_stats()
 
     def close(self) -> None:

@@ -260,6 +260,15 @@ class FleetCoordinator:
             "periodic_failures": sum(m.coordinator.stats.periodic_failures
                                      for m in self.members),
             "rebalance": sum(m.coordinator.stats.rebalance_ckpts for m in self.members),
+            # robustness counters: bounded retries burned on transient IO
+            # faults, faults a torture plan injected (0 in clean runs), and
+            # periodic saves skipped while a member's storage was degraded
+            "io_retries": sum(m.coordinator.stats.io_retries
+                              for m in self.members),
+            "faults_injected": sum(m.coordinator.stats.faults_injected
+                                   for m in self.members),
+            "saves_degraded": sum(m.coordinator.stats.saves_degraded
+                                  for m in self.members),
             # physical bytes pushed to the shared volume: under a delta-mode
             # store this is dirty chunks only, far below N_saves x state size
             "bytes_written": sum(m.coordinator.stats.ckpt_bytes_written

@@ -87,6 +87,17 @@ class CloudProvider(abc.ABC):
         the coordinator acts on the first unhandled one of each kind.
         """
 
+    def poll_once(self, metadata, instance_name: str,
+                  now: float) -> list[PreemptNotice]:
+        """One fallible poll attempt: the coordinator's retry/degradation
+        wrapper calls this, and the ``provider.poll`` fault point lets a
+        FaultPlan stand in for a flaky metadata endpoint (a real endpoint
+        surfaces as OSError/TimeoutError from the HTTP layer)."""
+        from ... import faults
+
+        faults.fault_point("provider.poll", instance_name or self.name)
+        return self.poll(metadata, instance_name, now)
+
     def acknowledge(self, metadata, notice: PreemptNotice) -> None:
         """Vendor-specific ack (Azure StartRequests). Default: no-op."""
 

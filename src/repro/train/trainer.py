@@ -288,6 +288,10 @@ class SpotTrainer:
                 "restore_queue_wait_s": st.restore_queue_wait_s,
                 "restore_decode_s": st.restore_decode_s,
                 "save_yields": st.save_yields,
+                "io_retries": st.io_retries,
+                "faults_injected": st.faults_injected,
+                "saves_degraded": st.saves_degraded,
+                "poll_failures": st.poll_failures,
                 "mttr_mean_s": st.mttr_mean_s,
                 "mttr_samples": list(st.mttr_samples),
             },

@@ -1,0 +1,74 @@
+"""SPOT040 seeded fixture: unbounded IO retry loops, plus clean twins.
+
+Violations: a `while True` (or `while 1`) whose try body performs primitive
+IO and whose handler swallows the failure — no raise/break/return, no
+backoff — retries a dead disk or endpoint forever. Clean twins: attempt
+bounds, backoff pacing, re-raising handlers, and worker dispatch loops.
+Never imported; the rule is lexical (see README in this directory).
+"""
+
+import os
+import time
+import urllib.request
+
+
+def keep_polling_forever(url):
+    # a flaky metadata endpoint spins this loop for the process lifetime
+    while True:  # SPOTLINT-EXPECT: SPOT040
+        try:
+            return urllib.request.urlopen(url).read()
+        except OSError:
+            pass
+
+
+def spin_on_stat(path):
+    # persistent EPERM re-attempts with zero pacing until the heat death
+    while 1:  # SPOTLINT-EXPECT: SPOT040
+        try:
+            os.stat(path)
+            break
+        except (IOError, PermissionError):
+            continue
+
+
+def bounded_twin(path):
+    # clean: counter-bounded attempts with a terminal raise
+    for _ in range(5):
+        try:
+            os.stat(path)
+            return True
+        except OSError:
+            time.sleep(0.05)
+    raise IOError(f"gave up on {path}")
+
+
+def backoff_poll_twin(url):
+    # clean: an infinite but *paced* poll loop is a deliberate design
+    delay = 0.5
+    while True:
+        try:
+            return urllib.request.urlopen(url).read()
+        except OSError:
+            time.sleep(delay)
+            delay = min(delay * 2.0, 30.0)
+
+
+def reraise_twin(path):
+    # clean: the handler surfaces the failure instead of swallowing it
+    while True:
+        try:
+            os.stat(path)
+            return True
+        except OSError:
+            raise
+
+
+def worker_dispatch_twin(q):
+    # clean: a job-dispatch loop, not a retry loop — the try wraps a
+    # high-level call, not primitive IO, and each iteration is new work
+    while True:
+        job = q.get()
+        try:
+            job.run()
+        except Exception as exc:
+            job.error = exc

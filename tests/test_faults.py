@@ -1,0 +1,476 @@
+"""Fault-injection torture tests for the checkpoint stack.
+
+The crash-point matrix aborts a save at every enumerated point of the
+commit protocol (``faults.COMMIT_CRASH_POINTS``) and asserts the recovery
+invariant: a fresh store always finds a bit-identical committed checkpoint
+(the prior one for every point before the COMMITTED marker), and the next
+save commits cleanly over the debris. The remaining classes cover the
+bounded-retry layer, storage degradation (skip-and-alert on ENOSPC while
+urgent saves still commit), metadata-poll degradation (assume-evictable),
+gc of aborted-commit staging debris, and a fleet eviction storm with
+transient IO faults live.
+
+``TestSeededTorture`` is the randomized storm behind the CI torture step;
+it only runs with ``SPOTON_FAULTS=1`` (seed via ``SPOTON_FAULTS_SEED``).
+"""
+
+import errno
+import logging
+import os
+import random
+
+import numpy as np
+import pytest
+
+from repro import faults
+from repro.checkpoint import CheckpointStore, ioutil
+from repro.core import (CheckpointPolicy, FleetCoordinator, FleetSpec,
+                        PeriodicEviction, Signal, SimulatedMetadataService,
+                        SpotOnCoordinator, TimeModel, VirtualClock, retry)
+
+
+def make_state(seed: int) -> dict:
+    rng = np.random.default_rng(seed)
+    return {
+        "w": rng.standard_normal((64, 33)).astype(np.float32),
+        "m": (rng.standard_normal(4096) * 8).astype(np.int32),
+        "step": seed,
+    }
+
+
+def template(state: dict) -> dict:
+    return {k: (np.zeros_like(v) if isinstance(v, np.ndarray) else 0)
+            for k, v in state.items()}
+
+
+def assert_state_equal(got: dict, want: dict) -> None:
+    assert set(got) == set(want)
+    for k, v in want.items():
+        if isinstance(v, np.ndarray):
+            np.testing.assert_array_equal(np.asarray(got[k]), v)
+        else:
+            assert got[k] == v
+
+
+def make_store(root, **kw) -> CheckpointStore:
+    # small chunks so every save exercises multiple chunk.{write,fsync,
+    # replace} sites, not just one
+    kw.setdefault("chunk_size", 4096)
+    kw.setdefault("retention", 5)
+    return CheckpointStore(str(root), **kw)
+
+
+def tmp_debris(root) -> list:
+    return [d for d in os.listdir(root) if ".tmp-" in d]
+
+
+# -- the FaultPlan itself -----------------------------------------------------
+
+
+class TestFaultPlan:
+    def test_nth_and_count_window(self):
+        plan = faults.FaultPlan().add("chunk.write", nth=2, count=2, error="eio")
+        hits = [plan.check("chunk.write") is not None for _ in range(5)]
+        assert hits == [False, True, True, False, False]
+
+    def test_persistent_rule_matches_wildcard(self):
+        plan = faults.FaultPlan().add("chunk.*", nth=2, count=-1)
+        assert plan.check("chunk.fsync") is None        # arming call
+        assert plan.check("chunk.replace").action == "crash"
+        assert plan.check("chunk.write").action == "crash"
+        assert plan.check("manifest.write") is None     # pattern miss
+        assert plan.fired() == 2
+
+    def test_path_substr_filter(self):
+        plan = faults.FaultPlan().add("chunk.write", path_substr="deadbeef",
+                                      error="eio")
+        assert plan.check("chunk.write", "/pool/ab/abcd1234") is None
+        inj = plan.check("chunk.write", "/pool/de/deadbeef01")
+        assert inj is not None and inj.err == errno.EIO
+
+    def test_unknown_error_kind_rejected(self):
+        plan = faults.FaultPlan().add("chunk.write", error="ekaboom")
+        with pytest.raises(ValueError):
+            plan.check("chunk.write")
+
+
+# -- bounded retry / backoff --------------------------------------------------
+
+
+class TestRetry:
+    def test_transient_retried_with_exponential_backoff(self):
+        sleeps = []
+        calls = {"n": 0}
+
+        def flaky():
+            calls["n"] += 1
+            if calls["n"] < 3:
+                raise OSError(errno.EIO, "flaky disk")
+            return "ok"
+
+        policy = retry.RetryPolicy(max_attempts=4, base_delay_s=1.0,
+                                   multiplier=2.0, jitter=0.0)
+        assert retry.call_with_retry(flaky, policy=policy,
+                                     sleep=sleeps.append) == "ok"
+        assert calls["n"] == 3
+        assert sleeps == [1.0, 2.0]
+
+    def test_persistent_errno_fails_immediately(self):
+        calls = {"n": 0}
+
+        def full_disk():
+            calls["n"] += 1
+            raise OSError(errno.ENOSPC, "disk full")
+
+        with pytest.raises(OSError) as ei:
+            retry.call_with_retry(full_disk, sleep=lambda d: None)
+        assert ei.value.errno == errno.ENOSPC
+        assert calls["n"] == 1  # retrying a full disk just burns the window
+
+    def test_exhaustion_reraises_after_bound(self):
+        calls = {"n": 0}
+
+        def dead_disk():
+            calls["n"] += 1
+            raise OSError(errno.EIO, "dead disk")
+
+        policy = retry.RetryPolicy(max_attempts=3, base_delay_s=0.0)
+        with pytest.raises(OSError):
+            retry.call_with_retry(dead_disk, policy=policy,
+                                  sleep=lambda d: None)
+        assert calls["n"] == 3
+
+    def test_jitter_deterministic_with_seeded_rng(self):
+        policy = retry.RetryPolicy(base_delay_s=1.0, jitter=0.5)
+        a = [policy.delay_s(k, random.Random(7)) for k in (1, 2, 3)]
+        b = [policy.delay_s(k, random.Random(7)) for k in (1, 2, 3)]
+        assert a == b
+        assert all(0.5 <= d / min(policy.max_delay_s, 2.0 ** (k - 1)) <= 1.5
+                   for k, d in enumerate(a, start=1))
+
+    def test_simulated_crash_passes_straight_through(self):
+        calls = {"n": 0}
+
+        def killed():
+            calls["n"] += 1
+            raise faults.SimulatedCrash("kill -9")
+
+        with pytest.raises(faults.SimulatedCrash):
+            retry.call_with_retry(killed, sleep=lambda d: None)
+        assert calls["n"] == 1  # a dead process does not retry
+
+
+# -- the crash-point matrix ---------------------------------------------------
+
+
+#: Points at or after the COMMITTED marker hits disk: the aborted save's own
+#: step is legitimately recoverable (the marker file exists even when its
+#: write was torn or the crash landed mid-write — existence is the commit
+#: bit). Every earlier point must recover the *prior* checkpoint.
+NEW_STEP_POINTS = {
+    ("marker.write", "torn"),
+    ("marker.write", "crash"),
+    ("commit.committed", "crash"),
+}
+
+
+class TestCrashPointMatrix:
+    @pytest.mark.parametrize(
+        "op,error", faults.COMMIT_CRASH_POINTS,
+        ids=[f"{op}-{error}" for op, error in faults.COMMIT_CRASH_POINTS])
+    def test_abort_recover_selfheal(self, tmp_path, op, error):
+        store = make_store(tmp_path)
+        s1, s2, s3 = make_state(1), make_state(2), make_state(3)
+        store.save(1, s1)
+
+        # errno faults must be persistent so the bounded retry layer cannot
+        # absorb them; crash-type faults kill the save on the first hit
+        count = -1 if error not in ("crash", "torn", "rollback") else 1
+        plan = faults.FaultPlan().add(op, error=error, count=count)
+        with faults.active(plan):
+            with pytest.raises((faults.SimulatedCrash, OSError)):
+                store.save(2, s2)
+        assert plan.fired() >= 1, f"crash point {op}/{error} never hit"
+
+        # a fresh store (the restarted process) must find a bit-identical
+        # committed checkpoint — the new step only when the marker landed
+        reopened = make_store(tmp_path)
+        opened = reopened.latest_valid()
+        assert opened is not None, "recovery lost every checkpoint"
+        expect_step = 2 if (op, error) in NEW_STEP_POINTS else 1
+        assert opened[0].step == expect_step
+        expect = {1: s1, 2: s2}[expect_step]
+        got, man = reopened.restore(template(expect))
+        assert man.step == expect_step
+        assert_state_equal(got, expect)
+
+        # the surviving writer's next save commits over the debris and its
+        # gc reclaims the aborted attempt's staging dir (same stage token)
+        store.save(3, s3)
+        got3, man3 = store.restore(template(s3))
+        assert man3.step == 3
+        assert_state_equal(got3, s3)
+        assert tmp_debris(tmp_path) == []
+
+
+# -- gc: staging debris vs. live saves ----------------------------------------
+
+
+class TestGcStagingDebris:
+    def test_sweep_during_inflight_save_spares_stage_and_pins(self, tmp_path):
+        store = make_store(tmp_path)
+        store.save(1, make_state(11))
+
+        # leave debris: a commit aborted after the manifest was staged
+        plan = faults.FaultPlan().add("commit.manifest_written", error="crash")
+        with faults.active(plan):
+            with pytest.raises(faults.SimulatedCrash):
+                store.save(2, make_state(12))
+        debris = tmp_debris(tmp_path)
+        assert len(debris) == 1
+
+        # re-run the save; mid-commit (pins held, stage in flight) fire the
+        # most aggressive sweep possible — zero age gates, full pool walk
+        seen = {}
+
+        def hook(phase):
+            if phase == "manifest_written":
+                store.gc(stale_staging_age_s=0.0, stale_chunk_age_s=0.0,
+                         sweep_chunks=True)
+                seen["tmp"] = tmp_debris(tmp_path)
+
+        store.fault_injector = hook
+        s2 = make_state(13)
+        store.save(2, s2)
+        # the sweep reclaimed the aborted attempt's stage but not the one a
+        # writer was inside
+        assert len(seen["tmp"]) == 1
+        assert debris[0] not in seen["tmp"]
+        # and the pinned chunks survived the pool walk: a fresh store
+        # reassembles the committed step bit-identically
+        got, man = make_store(tmp_path).restore(template(s2))
+        assert man.step == 2
+        assert_state_equal(got, s2)
+
+    def test_foreign_debris_is_age_gated(self, tmp_path):
+        store = make_store(tmp_path)
+        store.save(1, make_state(21))
+        foreign = os.path.join(str(tmp_path),
+                               "step_00000002.tmp-ffffff-deadbeef")
+        os.makedirs(foreign)
+        store.gc(stale_staging_age_s=3600.0)
+        assert os.path.isdir(foreign)       # young foreign stage: protected
+        store.gc(stale_staging_age_s=0.0)
+        assert not os.path.exists(foreign)  # past the gate: reclaimed
+
+
+# -- fsync_dir degradation ----------------------------------------------------
+
+
+class TestFsyncDirDegradation:
+    def test_unsupported_fs_warns_once_and_continues(self, tmp_path,
+                                                     monkeypatch, caplog):
+        monkeypatch.setattr(ioutil, "_fsync_warned", False)
+        monkeypatch.setattr(ioutil.os, "fsync", lambda fd: (_ for _ in ()).throw(
+            OSError(errno.EINVAL, "Invalid argument")))
+        with caplog.at_level(logging.WARNING, logger="repro.checkpoint.ioutil"):
+            ioutil.fsync_dir(str(tmp_path))   # no raise: degrade
+            ioutil.fsync_dir(str(tmp_path))   # second call: silent
+        warned = [r for r in caplog.records if "fsync unsupported" in r.message]
+        assert len(warned) == 1
+
+    def test_real_io_error_propagates(self, tmp_path, monkeypatch):
+        monkeypatch.setattr(ioutil.os, "fsync", lambda fd: (_ for _ in ()).throw(
+            OSError(errno.EIO, "Input/output error")))
+        with pytest.raises(OSError) as ei:
+            ioutil.fsync_dir(str(tmp_path))
+        assert ei.value.errno == errno.EIO  # lost durability must not be hidden
+
+
+# -- storage degradation: skip-and-alert --------------------------------------
+
+
+def make_coord(tmp_path, periodic_s=100.0, async_writes=False):
+    clock = VirtualClock()
+    store = make_store(tmp_path, time_fn=clock.now)
+    policy = CheckpointPolicy(periodic_interval_s=periodic_s,
+                              async_writes=async_writes)
+    coord = SpotOnCoordinator(store, policy, clock, time_model=TimeModel())
+    md = SimulatedMetadataService(clock, "vm-0")
+    coord.attach_instance(md, "vm-0")
+    return coord, md, clock, store
+
+
+class TestStorageDegradation:
+    def test_enospc_periodic_degrades_urgent_still_commits(self, tmp_path):
+        coord, md, clock, store = make_coord(tmp_path)
+        clock.advance(100.0)
+        coord.on_step_end(1, lambda: make_state(1))
+        assert coord.stats.periodic_ckpts == 1
+
+        plan = faults.FaultPlan().add("chunk.write", error="enospc", count=-1)
+        with faults.active(plan):
+            # full disk at the next cadence: the save fails, training does
+            # not, and the coordinator enters the skip-and-alert window
+            clock.advance(100.0)
+            assert coord.on_step_end(2, lambda: make_state(2)) is Signal.CONTINUE
+            assert coord.stats.periodic_failures == 1
+            assert coord.stats.saves_degraded == 1
+            # next cadence lands inside the window: skipped outright, no
+            # second ENOSPC round-trip
+            clock.advance(100.0)
+            coord.on_step_end(3, lambda: make_state(3))
+            assert coord.stats.periodic_ckpts == 1
+            assert coord.stats.periodic_failures == 1   # skip, not a failure
+            assert coord.stats.saves_degraded == 2
+            # an eviction notice mid-degradation: the urgent save must still
+            # attempt — this state dedups against step 1's chunks, so it
+            # commits even on the full disk
+            md.simulate_eviction()
+            clock.advance(1.0)
+            assert coord.on_step_end(4, lambda: make_state(1)) is Signal.PREEMPTING
+            assert coord.stats.termination_ckpts == 1
+
+        # cooldown over (2x the cadence): the next periodic probes storage
+        # again and succeeds now the fault cleared
+        clock.advance(300.0)
+        coord.on_step_end(5, lambda: make_state(5))
+        assert coord.stats.periodic_ckpts == 2
+        assert store.committed_steps() == [1, 4, 5]
+        # counters surfaced for run reports
+        clock.advance(1.0)
+        coord.on_step_end(6, lambda: make_state(5))
+        assert coord.stats.faults_injected >= 1
+
+
+# -- metadata-poll retry and assume-evictable ---------------------------------
+
+
+class TestPollDegradation:
+    def test_transient_poll_fault_absorbed_by_backoff(self, tmp_path):
+        coord, md, clock, store = make_coord(tmp_path, periodic_s=1e9)
+        plan = faults.FaultPlan().add("provider.poll", error="etimedout",
+                                      count=2)
+        with faults.active(plan):
+            clock.advance(10.0)
+            before = clock.now()
+            assert coord.on_step_end(1, lambda: make_state(1)) is Signal.CONTINUE
+        assert plan.fired() == 2
+        assert coord.stats.poll_failures == 0      # the retry layer ate it
+        # backoff slept on the injected clock, not the wall clock
+        assert clock.now() > before
+        clock.advance(10.0)
+        coord.on_step_end(2, lambda: make_state(1))  # fold retry counters
+        assert coord.stats.io_retries >= 2
+
+    def test_persistent_poll_failure_assumes_evictable(self, tmp_path):
+        coord, md, clock, store = make_coord(tmp_path, periodic_s=1e9)
+        plan = faults.FaultPlan().add("provider.poll", error="eio", count=-1)
+        with faults.active(plan):
+            for step in range(1, 7):
+                clock.advance(10.0)
+                coord.on_step_end(step, lambda: make_state(1))
+        # six consecutive dead polls, each already retried with backoff
+        assert coord.stats.poll_failures == 6
+        # every assume_evictable_after-th failure degrades to "assume
+        # evictable": a synthetic rebalance drives a proactive checkpoint
+        assert coord.stats.rebalance_ckpts == 2
+        assert store.committed_steps()
+        # endpoint back: one clean poll resets the streak
+        clock.advance(10.0)
+        coord.on_step_end(7, lambda: make_state(1))
+        assert coord._poll_fail_streak == 0
+
+
+# -- fleet eviction storm with live faults ------------------------------------
+
+
+class TestFleetStormUnderFaults:
+    def test_storm_completes_and_surfaces_fault_counters(self, tmp_path):
+        plan = (faults.FaultPlan()
+                .add("chunk.write", error="eio", count=1)
+                .add("chunk.fsync", error="eio", count=1)
+                .add("provider.poll", error="etimedout", count=1))
+        with faults.active(plan):
+            clock = VirtualClock()
+            store = CheckpointStore(str(tmp_path), time_fn=clock.now,
+                                    retention=50)
+            spec = FleetSpec(providers=("azure", "aws", "gcp"),
+                             schedules=(PeriodicEviction(150.0),
+                                        PeriodicEviction(200.0),
+                                        PeriodicEviction(250.0)),
+                             provisioning_delay_s=60.0)
+            fleet = FleetCoordinator(store, CheckpointPolicy.transparent(100.0),
+                                     clock, spec, time_model=TimeModel())
+            rep = fleet.run(total_steps=50, step_time_s=10.0)
+        # transient faults on the save path and the metadata endpoint are
+        # absorbed: the run completes and the state stays consistent
+        assert rep.completed
+        assert rep.final_state_consistent
+        assert plan.fired() == 3
+        assert rep.checkpoints["io_retries"] >= 2
+        assert rep.checkpoints["faults_injected"] >= 3
+        assert rep.checkpoints["saves_degraded"] == 0
+
+
+# -- randomized seeded torture (CI: SPOTON_FAULTS=1) --------------------------
+
+
+torture = pytest.mark.skipif(
+    not os.environ.get("SPOTON_FAULTS"),
+    reason="seeded torture storm: set SPOTON_FAULTS=1 (CI torture step)")
+
+
+@torture
+class TestSeededTorture:
+    def test_random_crash_storm_never_loses_committed_state(self, tmp_path):
+        seed = int(os.environ.get("SPOTON_FAULTS_SEED", "0"))
+        rng = random.Random(seed)
+        store = make_store(tmp_path, retention=4)
+        committed = {}
+        step = 1
+        store.save(step, make_state(100 + step))
+        committed[step] = make_state(100 + step)
+
+        ops = [op for op, _ in faults.COMMIT_CRASH_POINTS]
+        errors = ["crash", "torn", "eio", "enospc"]
+        for _trial in range(12):
+            step += 1
+            s = make_state(100 + step)
+            op = rng.choice(ops)
+            error = rng.choice(errors)
+            count = -1 if error in ("eio", "enospc") else 1
+            plan = faults.FaultPlan().add(op, nth=rng.randint(1, 3),
+                                          error=error, count=count)
+            try:
+                with faults.active(plan):
+                    store.save(step, s)
+                committed[step] = s
+            except (faults.SimulatedCrash, OSError):
+                pass
+            # invariant after every trial: a fresh store finds a committed
+            # checkpoint whose payload is bit-identical to what was saved
+            fresh = make_store(tmp_path, retention=4)
+            opened = fresh.latest_valid()
+            assert opened is not None
+            got_step = opened[0].step
+            expect = committed.get(got_step)
+            if expect is None:
+                # the abort landed at/after the marker: the "failed" save
+                # actually committed — legal, as long as it reads back whole
+                assert got_step == step
+                committed[step] = expect = s
+            got, _ = fresh.restore(template(expect))
+            assert_state_equal(got, expect)
+
+        # the survivor self-heals: one clean save, then a zero-age sweep
+        # leaves no staging debris behind
+        step += 1
+        s = make_state(100 + step)
+        store.save(step, s)
+        got, man = store.restore(template(s))
+        assert man.step == step
+        assert_state_equal(got, s)
+        store.gc(stale_staging_age_s=0.0, stale_chunk_age_s=0.0,
+                 sweep_chunks=True)
+        assert tmp_debris(tmp_path) == []

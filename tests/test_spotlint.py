@@ -36,6 +36,7 @@ FIXTURE_FILES = [
     "lane_misuse.py",
     "escaping_view.py",
     "abba_locks.py",
+    "unbounded_retry.py",
 ]
 
 
