@@ -38,7 +38,7 @@ LOCK_CTORS = {"Lock", "RLock", "Condition"}
 BLOCKING_DOTTED = {
     "os.fsync", "os.replace", "os.rename", "os.remove", "os.unlink",
     "os.listdir", "os.utime", "os.stat", "os.makedirs", "os.scandir",
-    "shutil.rmtree", "time.sleep",
+    "shutil.rmtree", "time.sleep", "socket.create_connection",
 }
 BLOCKING_BARE = {
     "fsync_dir", "futures_wait", "fingerprint_diff", "fingerprint_blocks",
@@ -47,6 +47,11 @@ BLOCKING_BARE = {
 BLOCKING_METHODS = {
     "result", "wait", "join", "touch", "check", "mark_committed",
     "write_manifest", "readinto", "flush",
+    # peer_exchange client/server socket surface: a peer network call under
+    # the tracker or pool lock stalls every thread behind a dead peer's
+    # timeout — fetch/push (PeerChunkClient), sendall/recv/recv_into/
+    # accept/connect (raw sockets) all wait on the network
+    "sendall", "recv", "recv_into", "connect", "accept", "fetch", "push",
 }
 
 

@@ -165,6 +165,16 @@ class ChunkPool:
     def path(self, h: str) -> str:
         return os.path.join(self.root, h[:2], h)
 
+    def chunk_path(self, ref: ChunkRef) -> str:
+        """Resolve the file holding ``ref``'s stored bytes. The base pool
+        answers with its own content-addressed entry; overlay pools (the
+        peer-exchange read-through pool, modeled cold-storage pools in the
+        benchmarks) override this single hook to redirect *where bytes come
+        from* while the decode/validation path stays untouched — content
+        addressing makes any source interchangeable once the digest checks.
+        """
+        return self.path(ref.hash)
+
     def touch(self, h: str) -> bool:
         """Refresh mtime (protects the chunk from age-gated sweeps by other
         writers); False if the chunk is not in the pool."""
@@ -229,7 +239,7 @@ class ChunkPool:
         """crc-validated view of a chunk's stored bytes (mmap-backed when the
         platform allows — decode copies straight from the page cache).
         Release with ``ioutil.release_view`` when done."""
-        path = self.path(ref.hash)
+        path = self.chunk_path(ref)
         faults.fault_point("chunk.read", path)
         view = mmap_view(path)
         if not chunk_content_ok(ref, view, self):
@@ -425,7 +435,7 @@ def _decode_chunk_into_once(pool: ChunkPool, ref: ChunkRef,
     the GIL, which is what makes chunk/tensor-parallel restore actually
     overlap. Compressed chunks read once and decompress into the window
     (the codec output is the only intermediate)."""
-    path = pool.path(ref.hash)
+    path = pool.chunk_path(ref)
     faults.fault_point("chunk.read", path)
     with open(path, "rb", buffering=0) as f:
         if os.fstat(f.fileno()).st_size != ref.nbytes:
@@ -471,3 +481,71 @@ def read_payload_into(pool: ChunkPool, refs: list[dict], dst,
         futures_wait(jobs)
         for j in jobs:            # propagate the first decode/crc failure
             j.result()
+
+
+def _decode_boundary_chunk(pool: ChunkPool, ref: ChunkRef, window: memoryview,
+                           cut_lo: int, cut_hi: int) -> None:
+    # A chunk straddling the requested range's edge: the chunk is the unit
+    # of storage (digest, crc, compression frame), so it must decode whole —
+    # into a scratch buffer — and only the overlap is copied out. At most
+    # two chunks per range pay this.
+    scratch = bytearray(ref.raw_len)
+    _decode_chunk_into(pool, ref, memoryview(scratch))
+    window[:] = scratch[cut_lo:cut_hi]
+
+
+def read_payload_range_into(pool: ChunkPool, refs: list[dict], dst,
+                            *, byte_lo: int, base_off: int = 0,
+                            executor: CodecLane | None = None
+                            ) -> tuple[int, int]:
+    """Decode only the chunks overlapping one byte range of a raw payload.
+
+    The range-addressed sibling of ``read_payload_into``: ``dst`` receives
+    bytes ``[byte_lo, byte_lo + len(dst))`` of the flattened raw payload,
+    and chunks entirely outside that window are never opened — this is what
+    makes a sharded restore read O(shard) instead of O(tensor). ``refs`` may
+    be the record's full chunk list or a pre-selected contiguous slice of it
+    (via the manifest's shard-span map); ``base_off`` is the flat byte
+    offset where ``refs[0]`` begins.
+
+    Chunks fully inside the window decode straight into their destination
+    slice (same zero-copy path as the full read); the at-most-two boundary
+    chunks decode to scratch and copy only the overlap. Returns
+    ``(chunks_decoded, chunks_skipped)`` so callers can account the win.
+    The serial path yields to higher codec lanes between chunks, matching
+    the store path's preemption discipline.
+    """
+    mv = array_bytes_view(dst) if isinstance(dst, np.ndarray) else memoryview(dst)
+    byte_hi = byte_lo + len(mv)
+    crefs = [ChunkRef.from_json(d) for d in refs]
+    if base_off + sum(r.raw_len for r in crefs) < byte_hi:
+        raise IOError(
+            f"chunk refs end at {base_off + sum(r.raw_len for r in crefs)} "
+            f"but the requested range extends to {byte_hi}")
+    jobs = []
+    decoded = skipped = 0
+    off = base_off
+    for ref in crefs:
+        lo, hi = off, off + ref.raw_len
+        off = hi
+        if hi <= byte_lo or lo >= byte_hi:
+            skipped += 1
+            continue
+        decoded += 1
+        w_lo, w_hi = max(lo, byte_lo), min(hi, byte_hi)
+        window = mv[w_lo - byte_lo:w_hi - byte_lo]
+        if w_lo == lo and w_hi == hi:
+            fn, fargs = _decode_chunk_into, (pool, ref, window)
+        else:
+            fn, fargs = _decode_boundary_chunk, (
+                pool, ref, window, w_lo - lo, w_hi - lo)
+        if executor is None:
+            codec_sched.maybe_yield()
+            fn(*fargs)
+        else:
+            jobs.append(executor.submit(fn, *fargs))
+    if jobs:
+        futures_wait(jobs)
+        for j in jobs:
+            j.result()
+    return decoded, skipped

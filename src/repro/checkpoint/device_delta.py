@@ -96,6 +96,29 @@ class DeltaBlocks:
         return array_bytes_view(self.dirty_data[j])[:valid]
 
 
+def stable_piece_key(name: str, index, global_shape,
+                     dtype_name: str) -> tuple[str, int]:
+    """Rescale-stable tracker key for one tensor piece.
+
+    ``(leaf name, global flat byte offset of the piece's first element)`` —
+    derived from the *global logical coordinates*, not from any local block
+    or device numbering, so the same stored bytes map to the same key on
+    every topology. That is what lets an elastic rescale remap surviving
+    fingerprints instead of invalidating the tracker: a piece a process
+    still addresses after the mesh re-plan keeps its entry under the
+    identical key. Fully-replicated and whole-tensor pieces sit at offset 0,
+    which keeps the common single-piece lookups trivial.
+    """
+    itemsize = ser.name_to_dtype(dtype_name).itemsize
+    off_elems = 0
+    stride = 1
+    for (lo, _hi), dim in zip(reversed(tuple(index or ())),
+                              reversed(tuple(global_shape or ()))):
+        off_elems += int(lo) * stride
+        stride *= int(dim)
+    return name, off_elems * itemsize
+
+
 @dataclass
 class _Entry:
     """Per-piece state from the last committed save."""
@@ -107,6 +130,11 @@ class _Entry:
     dtype_name: str
     chunk_size: int
     verified_at: float         # monotonic ts of last pool check/touch
+    # global byte span [offset, offset+length) this piece covers, plus the
+    # whole leaf's logical byte size — the inputs of the rescale
+    # addressability decision (see DeviceDeltaTracker.rescale)
+    span: tuple[int, int] = (0, 0)
+    total_nbytes: int = 0
 
 
 @dataclass
@@ -271,7 +299,8 @@ class DeviceDeltaTracker:
         self._pending: dict[str, _Pending] = {}
         # observability: decisions this process made, read by tests/benches
         self.stats = {"tracked_saves": 0, "blocks_skipped": 0,
-                      "blocks_transferred": 0, "fallbacks": 0}
+                      "blocks_transferred": 0, "fallbacks": 0,
+                      "rescale_events": 0, "fp_kept": 0, "fp_dropped": 0}
 
     # -- eligibility --------------------------------------------------------
 
@@ -422,16 +451,67 @@ class DeviceDeltaTracker:
                             for c in rec["chunks"]]
                     if len(refs) != int(np.prod(fp.shape)):
                         continue
-                    self._entries[(name, 0)] = _Entry(
+                    itemsize = ser.name_to_dtype(rec["dtype"]).itemsize
+                    nbytes = int(np.prod(rec["shape"])) * itemsize
+                    key = stable_piece_key(name, rec["index"],
+                                           rec["global_shape"], rec["dtype"])
+                    self._entries[key] = _Entry(
                         fp=fp, refs=refs, codec=codec,
                         shape=tuple(rec["shape"]), dtype_name=rec["dtype"],
                         chunk_size=self.chunk_size,
-                        verified_at=time.monotonic())
+                        verified_at=time.monotonic(),
+                        span=(key[1], nbytes),
+                        total_nbytes=(int(np.prod(rec["global_shape"]))
+                                      * itemsize))
         return on_committed
+
+    # -- elastic topology changes -------------------------------------------
+
+    def rescale(self, addressable: Callable[[str, int, int, int], bool]
+                | None = None) -> dict[str, int]:
+        """Remap tracker state across an elastic topology change.
+
+        ``addressable(name, byte_lo, byte_hi, total_nbytes)`` answers
+        whether this process still owns the piece's global byte span under
+        the new mesh; None means fully-replicated data parallelism (the
+        fleet's model), where every span stays addressable. Entries are
+        keyed by global logical offset (``stable_piece_key``), so a
+        surviving span keeps its device fingerprints — the next delta save
+        still skips every clean block instead of re-transferring the world,
+        which is what carries the D2H win through a rescale. Entries whose
+        span the process no longer owns are dropped (their chunks remain in
+        the pool; a save from their new owner re-seeds them). In-flight
+        prestage work is discarded either way: it was computed against the
+        old mesh's arrays.
+
+        Returns ``{"kept": k, "dropped": d}`` and accumulates the same into
+        ``stats``. For a full reset (restore onto unknown state) use
+        ``invalidate``.
+        """
+        with self._lock:
+            self._pending.clear()
+            snapshot = [(key, ent.span, ent.total_nbytes)
+                        for key, ent in self._entries.items()]
+        # the predicate is caller code — never run it under the tracker lock
+        drop = [key for key, (lo, ln), total in snapshot
+                if addressable is not None
+                and not addressable(key[0], lo, lo + ln, total)]
+        with self._lock:
+            dropped = 0
+            for key in drop:
+                if self._entries.pop(key, None) is not None:
+                    dropped += 1
+            kept = len(self._entries)
+            self.stats["rescale_events"] += 1
+            self.stats["fp_kept"] += kept
+            self.stats["fp_dropped"] += dropped
+        return {"kept": kept, "dropped": dropped}
 
     def invalidate(self) -> None:
         """Drop all device state; the next save takes the full path (and
-        re-seeds the tracker). Called on restore/topology change."""
+        re-seeds the tracker). The blunt instrument — restores onto
+        arbitrary state need it; elastic topology changes should call
+        ``rescale`` instead, which keeps every still-addressable span."""
         with self._lock:
             self._entries.clear()
             self._pending.clear()

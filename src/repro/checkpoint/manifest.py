@@ -101,6 +101,75 @@ class Manifest:
         return out
 
 
+# -- per-leaf shard -> chunk-span map (format_version 2, optional) --------------
+#
+# A v2 tensor record may carry ``shard_spans``: one ``[row_lo, row_hi)`` pair
+# per chunk ref, giving the axis-0 row band of the (stored-dtype) payload that
+# chunk covers. A restoring process that only addresses rows ``[a, b)`` of a
+# leaf can select exactly the chunks whose bands intersect ``[a, b)`` without
+# first materializing prefix sums over every ref — and, more importantly, the
+# map makes the save-time chunking *auditable*: the reader can cross-check the
+# bands against the refs' ``raw_len`` prefix sums and refuse a manifest whose
+# map lies. Absent on records written before this version (readers fall back
+# to the prefix sums) and on scalar/0-d payloads (no row axis to band).
+
+
+def chunk_byte_offsets(rec: dict) -> list[int]:
+    """Prefix sums of a v2 record's chunk ``raw_len``s: chunk ``j`` covers
+    bytes ``[offs[j], offs[j+1])`` of the flattened raw payload."""
+    offs = [0]
+    for c in rec.get("chunks", ()):
+        offs.append(offs[-1] + int(c["r"]))
+    return offs
+
+
+def shard_span_map(shape, row_bytes: int, chunk_raw_lens) -> list | None:
+    """Axis-0 row band per chunk, or None when the payload has no row axis.
+
+    ``row_bytes`` is the stored-dtype byte size of one axis-0 row (trailing
+    dims collapsed). Chunks are sequential windows over the flat payload, so
+    chunk ``j`` spanning bytes ``[off, off+len)`` touches rows
+    ``[off // row_bytes, ceil((off+len) / row_bytes))``.
+    """
+    if not shape or row_bytes <= 0:
+        return None
+    spans = []
+    off = 0
+    for raw_len in chunk_raw_lens:
+        end = off + int(raw_len)
+        spans.append([off // row_bytes, -(-end // row_bytes)])
+        off = end
+    return spans
+
+
+def record_shard_spans(rec: dict) -> list | None:
+    """A record's shard->chunk-span map, validated against the chunk refs.
+
+    Returns the map as ``[(row_lo, row_hi), ...]`` or None when the record
+    predates the map (or has no row axis). A map inconsistent with the refs
+    (wrong length, non-monotonic, or bands that cannot contain the chunk's
+    bytes) is treated as absent — the prefix-sum fallback is always correct,
+    so a corrupt map must never be able to skip chunks a shard needs.
+    """
+    spans = rec.get("shard_spans")
+    if spans is None:
+        return None
+    chunks = rec.get("chunks", ())
+    if len(spans) != len(chunks):
+        return None
+    out = []
+    prev_hi = 0
+    for pair in spans:
+        if not isinstance(pair, (list, tuple)) or len(pair) != 2:
+            return None
+        lo, hi = int(pair[0]), int(pair[1])
+        if lo < 0 or hi < lo or lo > prev_hi:
+            return None  # gap or inversion: bands must tile monotonically
+        prev_hi = max(prev_hi, hi)
+        out.append((lo, hi))
+    return out
+
+
 def write_manifest(dirpath: str, manifest: Manifest) -> None:
     path = os.path.join(dirpath, MANIFEST_NAME)
     tmp = path + ".tmp"

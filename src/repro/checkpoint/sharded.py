@@ -41,6 +41,7 @@ this single-process container process 0 owns every shard, same code path.
 
 from __future__ import annotations
 
+import bisect
 import os
 import threading
 import time
@@ -54,7 +55,10 @@ import numpy as np
 import jax
 
 from . import chunkstore
+from . import manifest as mf
 from . import serialize as ser
+from ..distributed import multihost
+from ..distributed.sharding import addressable_shard_spans
 from .device_delta import DeltaBlocks, DeviceDeltaTracker, write_delta_blocks_piece
 from .ioutil import fsync_dir
 
@@ -390,6 +394,17 @@ def write_snapshot_delta(
         d = rec.to_json()
         d["chunks"] = [r.to_json() for r in refs]
         d["raw_nbytes"] = raw_len
+        # optional shard->chunk-span map: the axis-0 row band each chunk
+        # covers, so a restoring process can select exactly the chunks its
+        # shards address (manifest.record_shard_spans documents the format)
+        quant, _ = ser.split_codec(codec)
+        if shape:
+            row_bytes = (int(np.prod(shape[1:], dtype=np.int64))
+                         * ser.stored_dtype(dtype_name, quant).itemsize)
+            spans = mf.shard_span_map(shape, row_bytes,
+                                      (r.raw_len for r in refs))
+            if spans is not None:
+                d["shard_spans"] = spans
         records.append(d)
     return records, new_bytes
 
@@ -449,6 +464,12 @@ class CheckpointReader:
                          chunkstore.CHUNKS_DIRNAME))
         self._readers: dict[str, ser.ShardFileReader] = {}
         self._readers_lock = threading.Lock()
+        # shard-aware restore accounting: chunks decoded vs proven skippable
+        # by range-addressed reads, plus regions that had to fall back to the
+        # piece-assembly path (read_slice) — the bench and tests read these
+        self.region_stats = {"region_reads": 0, "chunks_decoded": 0,
+                             "chunks_skipped": 0, "fallback_reads": 0}
+        self._stats_lock = threading.Lock()
         # name -> list of (record, file)
         self.by_name: dict[str, list[dict]] = {}
         for rec in tensor_records:
@@ -568,6 +589,82 @@ class CheckpointReader:
         if tuple(tuple(int(x) for x in p) for p in rec["index"]) != full:
             return None
         return rec
+
+    def read_region_streaming(self, name: str, region: Index,
+                              *, parallel: bool = True) -> np.ndarray | None:
+        """Range-addressed decode of one contiguous global region of ``name``
+        — only the chunks whose bytes the region touches are opened, so a
+        sharded restore reads O(shard), not O(tensor).
+
+        The stored layout must allow it: a v2 single-full-piece record whose
+        flat C-order payload makes the region one contiguous byte range
+        (i.e. only axis 0 sub-sliced; trailing axes full). Chunk selection
+        goes through the manifest's shard-span map when the record carries
+        one (``manifest.record_shard_spans``), else through ``raw_len``
+        prefix sums — both pick the same chunks. Returns the region in the
+        logical dtype, or None when the layout cannot be range-addressed
+        (v1 container records, multi-piece saves, trailing-axis slices);
+        callers fall back to ``read_slice``, which is always correct.
+        Bit-identical to slicing the full-leaf read: raw chunks decode into
+        the exact destination window, and int8 dequantization multiplies
+        elementwise with the tensor-global scale, so restoring a region
+        equals restoring the tensor and slicing it."""
+        rec = self.single_piece_record(name)
+        if rec is None or "chunks" not in rec:
+            return None
+        shape = tuple(int(s) for s in rec["shape"])
+        region = tuple((int(a), int(b)) for a, b in region)
+        if len(region) != len(shape):
+            return None
+        if any(not 0 <= a <= b <= s for (a, b), s in zip(region, shape)):
+            return None
+        full = tuple((0, s) for s in shape)
+        if region == full:
+            return self._read_piece_into(rec, None, parallel=parallel)
+        if any((a, b) != (0, s) for (a, b), s in zip(region[1:], shape[1:])):
+            return None          # trailing-axis sub-slice: not flat-contiguous
+        quant, _comp = ser.split_codec(rec.get("codec", "raw"))
+        pdtype = ser.stored_dtype(rec["dtype"], quant)
+        row_bytes = int(np.prod(shape[1:], dtype=np.int64)) * pdtype.itemsize
+        a, b = region[0]
+        byte_lo, byte_hi = a * row_bytes, b * row_bytes
+        refs = rec["chunks"]
+        offs = mf.chunk_byte_offsets(rec)
+        spans = mf.record_shard_spans(rec)
+        if spans is not None:
+            # chunks whose row band intersects [a, b)
+            c0 = bisect.bisect_right([hi for _, hi in spans], a)
+            c1 = bisect.bisect_left([lo for lo, _ in spans], b)
+        else:
+            c0 = bisect.bisect_right(offs, byte_lo) - 1
+            c1 = bisect.bisect_left(offs, byte_hi)
+        c0, c1 = max(c0, 0), min(c1, len(refs))
+        if c1 <= c0:
+            return None          # degenerate map/region: let read_slice decide
+        out = np.empty(tuple(hi - lo for lo, hi in region), dtype=pdtype)
+        decoded, skipped = chunkstore.read_payload_range_into(
+            self.chunk_pool, refs[c0:c1], out,
+            byte_lo=byte_lo, base_off=offs[c0],
+            executor=chunkstore.restore_executor() if parallel else None)
+        with self._stats_lock:
+            st = self.region_stats
+            st["region_reads"] += 1
+            st["chunks_decoded"] += decoded
+            st["chunks_skipped"] += skipped + (len(refs) - (c1 - c0))
+        return ser.finish_payload(out, dtype_name=rec["dtype"], quant=quant,
+                                  scale=rec.get("scale"))
+
+    def read_region_for_restore(self, name: str, region: Index) -> np.ndarray:
+        """One shard-region decode job on the RESTORE lane: range-addressed
+        when the stored layout allows, ``read_slice`` fallback otherwise.
+        Runs *on* the restore executor, so chunk work inside stays serial —
+        a lane job must never block on sub-jobs queued behind it."""
+        arr = self.read_region_streaming(name, region, parallel=False)
+        if arr is not None:
+            return arr
+        with self._stats_lock:
+            self.region_stats["fallback_reads"] += 1
+        return self.read_slice(name, region, parallel=False)
 
     def read_payload(self, name: str, *, parallel: bool = True
                      ) -> tuple[np.ndarray, str, str, float | None]:
@@ -771,12 +868,14 @@ def restore_to_template_streaming(reader: CheckpointReader, template) -> Any:
     for name, leaf in named.items():
         if plans[name] != "sharded":
             continue
+        # per-shard enqueue: decode jobs only for the regions some
+        # *addressable* device of this process materializes — in a
+        # multihost pod each process touches O(its shards) chunks, and the
+        # range-addressed read inside skips every chunk outside the region
         per_region: dict[Index, Any] = {}
-        for idx in leaf.sharding.devices_indices_map(tuple(leaf.shape)).values():
-            key = _slices_to_index(idx, tuple(leaf.shape))
-            if key not in per_region:
-                per_region[key] = ex.submit(reader.read_slice, name, key,
-                                            parallel=False)
+        for key in addressable_shard_spans(leaf.sharding, tuple(leaf.shape)):
+            per_region[key] = ex.submit(reader.read_region_for_restore,
+                                        name, key)
         regions[name] = per_region
         all_futs.extend(per_region.values())
 
@@ -834,4 +933,10 @@ def restore_to_template_streaming(reader: CheckpointReader, template) -> Any:
             f.cancel()
         futures_wait(all_futs)
         raise
+    # pod rendezvous: no participant takes its first post-restore step until
+    # every participant has materialized its shards — multihost semantics
+    # (jax.experimental.multihost_utils API), simulated in-process for CPU
+    # CI via distributed.multihost.use_simulated_barrier. A lone process
+    # with no barrier installed passes straight through.
+    multihost.sync_global_devices("spoton:restore_streaming")
     return jax.tree_util.tree_unflatten(treedef, [out[n] for n in named])

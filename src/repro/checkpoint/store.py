@@ -300,40 +300,50 @@ class CheckpointStore:
                 steps.append(step)
         return sorted(steps)
 
-    def _try_open(self, step: int, *, validate: bool) -> tuple[mf.Manifest, sharded.CheckpointReader] | None:
+    def _try_open(self, step: int, *, validate: bool,
+                  chunk_pool: chunkstore.ChunkPool | None = None
+                  ) -> tuple[mf.Manifest, sharded.CheckpointReader] | None:
         path = os.path.join(self.root, mf.step_dirname(step))
         try:
             man = mf.read_manifest(path)
             reader = sharded.CheckpointReader(path, man.tensors,
-                                              chunk_pool=self.pool)
+                                              chunk_pool=chunk_pool or self.pool)
             if validate:
                 reader.validate()
             return man, reader
         except Exception:
             return None
 
-    def latest_valid(self, *, max_step: int | None = None) -> tuple[mf.Manifest, sharded.CheckpointReader] | None:
+    def latest_valid(self, *, max_step: int | None = None,
+                     chunk_pool: chunkstore.ChunkPool | None = None
+                     ) -> tuple[mf.Manifest, sharded.CheckpointReader] | None:
         """Newest committed checkpoint that parses (and validates); else older."""
         for step in reversed(self.committed_steps()):
             if max_step is not None and step > max_step:
                 continue
-            opened = self._try_open(step, validate=self.validate_on_restore)
+            opened = self._try_open(step, validate=self.validate_on_restore,
+                                    chunk_pool=chunk_pool)
             if opened is not None:
                 return opened
         return None
 
     def restore(self, template, *, step: int | None = None,
-                streaming: bool = False):
+                streaming: bool = False,
+                chunk_pool: chunkstore.ChunkPool | None = None):
         """Restore into `template`'s structure/shardings. Returns (state, manifest).
 
         ``streaming`` pipelines read→decode→device_put per tensor (see
         ``sharded.restore_to_template_streaming``) — bit-identical results,
         shorter eviction→first-step-back window when template leaves carry
-        device shardings."""
+        device shardings. ``chunk_pool`` overrides where v2 chunk bytes are
+        resolved from — a replacement passes its peer read-through pool
+        (``peer_exchange.ReadThroughPool``) to warm-restore from surviving
+        fleet members before falling back to this store."""
         if step is not None:
-            opened = self._try_open(step, validate=self.validate_on_restore)
+            opened = self._try_open(step, validate=self.validate_on_restore,
+                                    chunk_pool=chunk_pool)
         else:
-            opened = self.latest_valid()
+            opened = self.latest_valid(chunk_pool=chunk_pool)
         if opened is None:
             raise FileNotFoundError(f"no valid checkpoint under {self.root}")
         man, reader = opened

@@ -556,7 +556,19 @@ class SpotOnCoordinator:
 
     # -- restart ----------------------------------------------------------------------
 
-    def restore_latest(self, template, *, streaming: bool = True):
+    def rescale_topology(self, addressable=None) -> dict[str, int]:
+        """Elastic topology change: remap the device-delta tracker's
+        fingerprints instead of invalidating them (see
+        ``DeviceDeltaTracker.rescale``). ``addressable(name, lo, hi,
+        total)`` says whether this process still owns a global byte span
+        under the new mesh; None = fully-replicated DP, everything
+        survives. No-op without a tracker."""
+        if self.delta_tracker is None:
+            return {"kept": 0, "dropped": 0}
+        return self.delta_tracker.rescale(addressable)
+
+    def restore_latest(self, template, *, streaming: bool = True,
+                       chunk_pool=None):
         """Most-recent-valid restore; returns (state, manifest) or None.
 
         ``streaming`` (default) pipelines disk→decode→device transfers —
@@ -574,7 +586,8 @@ class SpotOnCoordinator:
         sched0 = codec_sched.snapshot_stats()["restore"]
         w0 = _time.perf_counter()
         try:
-            state, man = self.store.restore(template, streaming=streaming)
+            state, man = self.store.restore(template, streaming=streaming,
+                                            chunk_pool=chunk_pool)
         except FileNotFoundError:
             return None
         wall = _time.perf_counter() - w0

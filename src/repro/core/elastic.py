@@ -59,6 +59,39 @@ def fleet_mesh_plan(n_instances: int, *, hosts_per_instance: int = 1,
                          model_parallel=model_parallel, axes=axes)
 
 
+def member_addressable(plan: MeshPlan, member_index: int, *,
+                       model_axis: str = "model"):
+    """Byte-span ownership predicate for one fleet member under ``plan`` —
+    the ``addressable`` argument of ``DeviceDeltaTracker.rescale`` /
+    ``SpotOnCoordinator.rescale_topology``.
+
+    Ownership model matches ``distributed.sharding.elastic_rules``: every
+    axis except ``model_axis`` replicates parameters (data parallelism), so
+    with ``model == 1`` each member addresses every span. A model-parallel
+    degree ``m > 1`` partitions each leaf's flat byte extent into ``m``
+    equal slices and the member owns the slice of its model coordinate
+    (``member_index % m`` — members fill the model axis fastest, mirroring
+    ``MeshPlan.build``'s row-major device placement). A fingerprint span
+    survives the rescale iff it lies fully inside the member's slice.
+    """
+    m = 1
+    for size, axis in zip(plan.shape, plan.axes):
+        if axis == model_axis:
+            m = int(size)
+    if m <= 1:
+        return lambda name, lo, hi, total: True
+    coord = member_index % m
+
+    def owns(name: str, lo: int, hi: int, total: int) -> bool:
+        if total <= 0:
+            return coord == 0
+        slice_lo = (coord * total) // m
+        slice_hi = ((coord + 1) * total) // m
+        return slice_lo <= lo and hi <= slice_hi
+
+    return owns
+
+
 def elastic_restore(store: CheckpointStore, template_fn, mesh: Mesh):
     """Restore the latest valid checkpoint onto `mesh`.
 

@@ -96,11 +96,17 @@ class FleetCoordinator:
         spec: FleetSpec,
         *,
         time_model: TimeModel | None = None,
+        peer_exchange=None,
     ):
         self.store = store
         self.policy = policy
         self.clock = clock
         self.spec = spec
+        # optional checkpoint.peer_exchange.FleetPeerExchange: when present,
+        # an evictee seeds survivors' local pools during its notice window
+        # and a cold member restores through its peer read-through pool
+        self.peer_exchange = peer_exchange
+        self.peer_seed_events: list[dict] = []
         self.ledger = TimeLedger(clock, time_model)
         # members never self-schedule periodic saves (the fleet owns the
         # cadence, below) but keep on-demand termination checkpoints
@@ -152,6 +158,7 @@ class FleetCoordinator:
     def _record_rescale(self, n_alive: int) -> None:
         event = {"t": self.clock.now(), "alive": n_alive,
                  "capacity": n_alive * self.spec.hosts_per_instance}
+        plan = None
         try:
             plan = fleet_mesh_plan(
                 n_alive, hosts_per_instance=self.spec.hosts_per_instance,
@@ -167,8 +174,42 @@ class FleetCoordinator:
                 pass  # plan recorded; a real fleet builds it on its own chips
         except ValueError as e:
             event["error"] = str(e)  # capacity can't host the MP degree
+        # rescale-stable fingerprints: each member remaps its device-delta
+        # tracker onto the new plan instead of starting from scratch — the
+        # D2H delta win survives the topology change (stable piece keys)
+        if plan is not None:
+            from .elastic import member_addressable
+            kept = dropped = 0
+            for m in self.members:
+                res = m.coordinator.rescale_topology(
+                    member_addressable(plan, m.index))
+                kept += res["kept"]
+                dropped += res["dropped"]
+            event["fingerprints_kept"] = kept
+            event["fingerprints_dropped"] = dropped
         self.rescale_events.append(event)
         log.info("elastic rescale: %s", event)
+
+    def _seed_peers(self, m: _Member) -> None:
+        """Eviction-notice move: the evictee pushes the latest committed
+        checkpoint's hottest chunks into the survivors' local pools (AWS
+        rebalance gives ≈120 s — the push budget is sized for it), so the
+        replacement's restore finds them one NIC hop away."""
+        if self.peer_exchange is None:
+            return
+        opened = self.store.latest_valid()
+        if opened is None:
+            return
+        man, reader = opened
+        reader.close()
+        try:
+            res = self.peer_exchange.seed_from(
+                m.index, self.store.pool, sorted(man.chunk_hashes()))
+        except OSError as e:            # seeding is best-effort by design
+            log.warning("peer seed from member %d failed: %s", m.index, e)
+            return
+        self.peer_seed_events.append(
+            {"t": self.clock.now(), "member": m.index, "step": man.step, **res})
 
     # -- the run loop -----------------------------------------------------------
 
@@ -203,7 +244,14 @@ class FleetCoordinator:
                 self._advance_to_next_capacity()
                 continue
             if cold:
-                restored = alive[0].coordinator.restore_latest(template)
+                # a replacement consults surviving peers before the shared
+                # store when the fleet runs a peer exchange (read-through:
+                # peer hit -> local pool -> decode; miss -> store fallback)
+                rt_pool = (self.peer_exchange.read_through(
+                               alive[0].index, self.store.pool)
+                           if self.peer_exchange is not None else None)
+                restored = alive[0].coordinator.restore_latest(
+                    template, chunk_pool=rt_pool)
                 if restored is not None:
                     state, _man = restored
                     state = {"w": np.asarray(state["w"]), "step": int(state["step"])}
@@ -235,7 +283,10 @@ class FleetCoordinator:
                 if sig is Signal.PREEMPTING:
                     m.evictions_seen += 1
                     # the member rides out its notice; replacement provisioning
-                    # begins when the platform destroys it (pool.tick above)
+                    # begins when the platform destroys it (pool.tick above).
+                    # Meanwhile the notice window pays for peer seeding: push
+                    # the hottest committed chunks to the survivors
+                    self._seed_peers(m)
 
         for m in self.members:
             m.coordinator.flush()
@@ -275,6 +326,12 @@ class FleetCoordinator:
                                  for m in self.members),
             "store_mode": self.store.mode,
             "store_total_bytes": self.store.total_bytes(),
+            # peer-exchange accounting (zeros without an exchange fabric)
+            "peer_seed_events": len(self.peer_seed_events),
+            "peer_seeded_chunks": (self.peer_exchange.stats["seeded_chunks"]
+                                   if self.peer_exchange else 0),
+            "peer_seeded_bytes": (self.peer_exchange.stats["seeded_bytes"]
+                                  if self.peer_exchange else 0),
             "by_provider": {
                 name: {
                     "termination": sum(m.coordinator.stats.termination_ckpts

@@ -1,5 +1,7 @@
-from .sharding import (ShardingRules, batch_spec, cache_shardings, shard_act,
-                       tree_shardings, use_sharding_rules)
+from .sharding import (ShardingRules, addressable_shard_spans, batch_spec,
+                       cache_shardings, shard_act, tree_shardings,
+                       use_sharding_rules)
 
-__all__ = ["ShardingRules", "batch_spec", "cache_shardings", "shard_act",
-           "tree_shardings", "use_sharding_rules"]
+__all__ = ["ShardingRules", "addressable_shard_spans", "batch_spec",
+           "cache_shardings", "shard_act", "tree_shardings",
+           "use_sharding_rules"]

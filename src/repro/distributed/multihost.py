@@ -1,0 +1,97 @@
+"""Multihost-style synchronization with an in-process simulation mode.
+
+``sync_global_devices(name)`` mirrors the API of
+``jax.experimental.multihost_utils.sync_global_devices``: every participant
+blocks until all participants reach the same named point. Three backends,
+picked automatically:
+
+* **simulated** — when a ``SimulatedBarrier`` is installed (via
+  ``use_simulated_barrier``), participants are *threads* of one process.
+  This is how CPU CI exercises the pod-restore rendezvous: N fleet members
+  run restore concurrently and none may take its first step until every
+  member has materialized its shards.
+* **real multihost** — ``jax.process_count() > 1``: delegate to
+  ``jax.experimental.multihost_utils`` (an actual cross-host barrier over
+  the distributed runtime).
+* **single process, no simulation** — a no-op; there is nobody to wait for.
+
+The simulated barrier is keyed by name so distinct sync points never
+release each other, and each named ``threading.Barrier`` is cyclic, so the
+same name can be reused across restore attempts (JAX reuses barrier names
+the same way).
+"""
+
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+
+import jax
+
+__all__ = ["SimulatedBarrier", "sync_global_devices", "use_simulated_barrier"]
+
+
+class SimulatedBarrier:
+    """In-process stand-in for the multihost barrier: ``parties`` threads
+    rendezvous per sync-point name. A timeout turns a lost participant into
+    a loud ``RuntimeError`` instead of a silent hang (CI-friendly)."""
+
+    def __init__(self, parties: int, *, timeout_s: float = 60.0):
+        if parties < 1:
+            raise ValueError("barrier needs at least one party")
+        self.parties = parties
+        self.timeout_s = timeout_s
+        self._lock = threading.Lock()
+        self._barriers: dict[str, threading.Barrier] = {}
+
+    def _barrier_for(self, name: str) -> threading.Barrier:
+        with self._lock:
+            b = self._barriers.get(name)
+            if b is None:
+                b = self._barriers[name] = threading.Barrier(self.parties)
+            return b
+
+    def wait(self, name: str) -> None:
+        try:
+            self._barrier_for(name).wait(timeout=self.timeout_s)
+        except threading.BrokenBarrierError:
+            raise RuntimeError(
+                f"simulated multihost barrier {name!r} broken: a participant "
+                f"crashed or missed the {self.timeout_s}s rendezvous window"
+            ) from None
+
+
+_sim_lock = threading.Lock()
+_simulated: SimulatedBarrier | None = None
+
+
+def install_simulated_barrier(barrier: SimulatedBarrier | None) -> None:
+    global _simulated
+    with _sim_lock:
+        _simulated = barrier
+
+
+@contextmanager
+def use_simulated_barrier(barrier: SimulatedBarrier):
+    """Route ``sync_global_devices`` through ``barrier`` for the duration.
+
+    Install once in the driver thread *before* spawning the participant
+    threads; the participants themselves only call ``sync_global_devices``.
+    """
+    install_simulated_barrier(barrier)
+    try:
+        yield barrier
+    finally:
+        install_simulated_barrier(None)
+
+
+def sync_global_devices(name: str) -> None:
+    """Block until every participant reaches the sync point ``name``."""
+    with _sim_lock:
+        sim = _simulated
+    if sim is not None:
+        sim.wait(name)
+        return
+    if jax.process_count() > 1:  # pragma: no cover - needs a real multihost run
+        from jax.experimental import multihost_utils
+        multihost_utils.sync_global_devices(name)

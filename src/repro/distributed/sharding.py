@@ -324,3 +324,36 @@ def cache_shardings(tree, rules: ShardingRules):
         name = _key_str(path).rsplit("/", 1)[-1]
         return NamedSharding(rules.mesh, cache_pspec(name, tuple(leaf.shape), rules))
     return jax.tree_util.tree_map_with_path(per_leaf, tree)
+
+
+# ---------------------------------------------------------------------------
+# per-process shard addressing (pod-scale restore)
+# ---------------------------------------------------------------------------
+
+def addressable_shard_spans(sharding, shape) -> list:
+    """Deduplicated global index spans this process must materialize.
+
+    One ``((start, stop), ...)`` tuple per distinct shard region held by an
+    *addressable* device of ``sharding`` — the planning input of the
+    per-shard streaming restore: in a multihost pod each process enqueues
+    decode work only for its own rows, while a single-process mesh (all
+    devices addressable) gets every region, exactly the shards
+    ``jax.make_array_from_callback`` will ask for. Falls back to all devices
+    when the sharding exposes no addressability (host ndarrays in tests).
+    """
+    shape = tuple(int(s) for s in shape)
+    imap = sharding.devices_indices_map(shape)
+    try:
+        addressable = set(sharding.addressable_devices)
+    except Exception:
+        addressable = None
+    out: dict = {}
+    for dev, slices in imap.items():
+        if addressable is not None and dev not in addressable:
+            continue
+        key = tuple(
+            (0 if sl.start is None else int(sl.start),
+             dim if sl.stop is None else int(sl.stop))
+            for sl, dim in zip(slices, shape))
+        out.setdefault(key, None)
+    return list(out)

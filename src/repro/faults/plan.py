@@ -31,6 +31,9 @@ op                      site
                         ``shards_written``, ``manifest_written``, ``renamed``,
                         ``committed``
 ``provider.poll``       cloud metadata poll in the coordinator
+``peer.send``           peer chunk server GET send (``crash`` = the serving
+                        member dies mid-transfer: half the payload, then EOF)
+``peer.fetch``          peer chunk client fetch attempt (errno = unreachable)
 ======================  ======================================================
 
 Rules match ops by ``fnmatch`` pattern, so ``chunk.*`` targets the whole

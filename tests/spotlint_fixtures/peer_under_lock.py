@@ -1,0 +1,69 @@
+"""SPOT031 seeded fixture: peer-exchange network calls under a lock.
+
+Violations: socket/peer-client calls (``fetch``/``push``/``sendall``/
+``recv``/``accept``/``socket.create_connection``) while holding a tracker
+or pool lock — every thread queued on that lock then waits out a dead
+peer's network timeout. Clean twins: snapshot the decision under the lock,
+do the network round-trip outside it, re-acquire to record the result
+(the decide-under-lock / dispatch-outside pattern the tracker uses).
+Never imported; the rule is lexical (see README in this directory).
+"""
+
+import socket
+import threading
+
+
+class ChunkCache:
+    def __init__(self, client, sock):
+        self._lock = threading.Lock()
+        self.client = client
+        self.sock = sock
+        self.entries = {}
+
+    def fetch_holding_lock(self, ref):
+        # a dead peer's timeout now serializes every tracker thread
+        with self._lock:
+            data = self.client.fetch(ref)  # SPOTLINT-EXPECT: SPOT031
+            self.entries[ref.hash] = data
+        return data
+
+    def push_holding_lock(self, addr, h, data):
+        with self._lock:
+            if h in self.entries:
+                return self.client.push(addr, h, data)  # SPOTLINT-EXPECT: SPOT031
+        return False
+
+    def serve_holding_lock(self, header, payload):
+        with self._lock:
+            self.sock.sendall(header)  # SPOTLINT-EXPECT: SPOT031
+            self.sock.sendall(payload)  # SPOTLINT-EXPECT: SPOT031
+
+    def dial_holding_lock(self, addr):
+        with self._lock:
+            conn = socket.create_connection(addr, timeout=1.0)  # SPOTLINT-EXPECT: SPOT031
+        return conn
+
+    def fetch_then_record_twin(self, ref):
+        # clean: decide under the lock, fetch outside it, record after
+        with self._lock:
+            if ref.hash in self.entries:
+                return self.entries[ref.hash]
+        data = self.client.fetch(ref)
+        with self._lock:
+            self.entries[ref.hash] = data
+        return data
+
+    def snapshot_then_push_twin(self, addr):
+        # clean: snapshot the work list under the lock, push outside
+        with self._lock:
+            todo = list(self.entries.items())
+        pushed = 0
+        for h, data in todo:
+            if self.client.push(addr, h, data):
+                pushed += 1
+        return pushed
+
+    def stats_only_twin(self, n):
+        # clean: pure bookkeeping under the lock is what locks are for
+        with self._lock:
+            self.entries["served"] = self.entries.get("served", 0) + n

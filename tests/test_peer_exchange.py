@@ -1,0 +1,409 @@
+"""Peer-to-peer chunk exchange: wire protocol, read-through restore,
+mid-transfer peer death (store fallback stays bit-identical), notice-window
+seeding through the fleet, RESTORE-lane discipline of the new submit sites,
+and the simulated multihost restore barrier."""
+
+import os
+import shutil
+import socket
+import threading
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro import faults
+from repro.analysis.spotlint import analyze
+from repro.checkpoint import CheckpointStore, chunkstore, codec_sched
+from repro.checkpoint import manifest as mf
+from repro.checkpoint import peer_exchange as px
+from repro.checkpoint.chunkstore import ChunkPool, ChunkRef, store_chunk
+from repro.core import (CheckpointPolicy, FleetCoordinator, FleetSpec,
+                        NoEviction, PeriodicEviction, TimeModel, VirtualClock)
+from repro.distributed import multihost
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def seed_chunks(pool: ChunkPool, rng, n=4, size=4096) -> list[ChunkRef]:
+    refs = []
+    for _ in range(n):
+        raw = rng.integers(0, 256, size=size, dtype=np.uint8).tobytes()
+        ref, _n, _rd = store_chunk(pool, raw, comp="zlib")
+        refs.append(ref)
+    return refs
+
+
+@pytest.fixture
+def server_pool(tmp_path):
+    pool = ChunkPool(str(tmp_path / "peer" / "chunks"))
+    srv = px.PeerChunkServer(pool).start()
+    yield pool, srv
+    srv.close()
+
+
+class TestProtocol:
+    def test_get_round_trip(self, server_pool, rng):
+        pool, srv = server_pool
+        refs = seed_chunks(pool, rng)
+        client = px.PeerChunkClient([srv.address])
+        for ref in refs:
+            data = client.fetch(ref)
+            assert data is not None
+            assert chunkstore.chunk_content_ok(ref, data)
+            assert data == pool.read(ref)
+        assert client.stats["hits"] == len(refs)
+        assert srv.stats["get_hits"] == len(refs)
+        assert srv.stats["bytes_served"] == sum(r.nbytes for r in refs)
+
+    def test_get_miss(self, server_pool):
+        _pool, srv = server_pool
+        client = px.PeerChunkClient([srv.address])
+        ghost = ChunkRef(hash="ab" * 20, nbytes=64, raw_len=64,
+                         crc32=0, comp="raw")
+        assert client.fetch(ghost) is None
+        assert client.stats["misses"] == 1
+        assert srv.stats["get_misses"] == 1
+
+    def test_put_lands_and_bad_digest_rejected(self, server_pool):
+        pool, srv = server_pool
+        client = px.PeerChunkClient([srv.address])
+        data = b"peer-seeded chunk payload" * 64
+        h = chunkstore.chunk_digest(data)
+        assert client.push(srv.address, h, data)
+        assert pool.check(h, len(data))
+        # a push may not plant bytes under an address they don't hash to
+        assert not client.push(srv.address, "00" * 20, data)
+        assert not pool.check("00" * 20, len(data))
+        assert client.stats["pushes"] == 1
+        assert client.stats["push_failures"] == 1
+
+    def test_dead_peer_is_a_miss_not_an_error(self, rng):
+        # grab a port that nothing listens on
+        s = socket.socket()
+        s.bind(("127.0.0.1", 0))
+        dead = s.getsockname()
+        s.close()
+        client = px.PeerChunkClient([dead], timeout_s=0.2)
+        ghost = ChunkRef(hash="cd" * 20, nbytes=64, raw_len=64,
+                         crc32=0, comp="raw")
+        assert client.fetch(ghost) is None
+        assert client.stats["misses"] == 1
+
+    def test_fetch_falls_through_to_second_peer(self, tmp_path, rng):
+        # peer A is empty, peer B holds the chunk: the client must find it
+        empty = ChunkPool(str(tmp_path / "a" / "chunks"))
+        full = ChunkPool(str(tmp_path / "b" / "chunks"))
+        refs = seed_chunks(full, rng, n=3)
+        sa = px.PeerChunkServer(empty).start()
+        sb = px.PeerChunkServer(full).start()
+        try:
+            client = px.PeerChunkClient([sa.address, sb.address])
+            for ref in refs:
+                assert client.fetch(ref) == full.read(ref)
+        finally:
+            sa.close()
+            sb.close()
+
+
+def make_store(tmp_path, rng, *, elems=8192):
+    store = CheckpointStore(str(tmp_path / "store"))
+    state = {"w": rng.normal(size=(elems,)).astype(np.float32),
+             "b": rng.normal(size=(257,)).astype(np.float32)}
+    store.save(1, state)
+    return store, state
+
+
+def manifest_refs(store: CheckpointStore) -> list[ChunkRef]:
+    man, reader = store.latest_valid()
+    reader.close()
+    refs: dict[str, ChunkRef] = {}
+    for rec in man.tensors:
+        for c in rec.get("chunks", ()):
+            refs.setdefault(c["h"], ChunkRef.from_json(c))
+    return list(refs.values())
+
+
+class TestReadThrough:
+    def _fabric(self, tmp_path, store, *, seed_peer=True):
+        local = ChunkPool(str(tmp_path / "local" / "chunks"))
+        peer = ChunkPool(str(tmp_path / "peer" / "chunks"))
+        if seed_peer:
+            for h, path in store.pool.all_chunks():
+                with open(path, "rb") as f:
+                    peer.write(h, f.read(), sync_dir=False)
+        srv = px.PeerChunkServer(peer).start()
+        client = px.PeerChunkClient([srv.address])
+        return px.ReadThroughPool(local, client, store.pool), srv
+
+    def test_restore_warm_from_peer_bit_identical(self, tmp_path, rng):
+        store, state = make_store(tmp_path, rng)
+        rt, srv = self._fabric(tmp_path, store)
+        try:
+            template = {k: np.zeros_like(v) for k, v in state.items()}
+            got, man = store.restore(template, chunk_pool=rt)
+            for k in state:
+                np.testing.assert_array_equal(np.asarray(got[k]), state[k])
+            assert rt.stats["peer_hits"] > 0
+            assert rt.stats["store_reads"] == 0
+            # peer hits landed in the local cache: a second restore is local
+            got2, _ = store.restore(template, chunk_pool=rt)
+            assert rt.stats["local_hits"] > 0
+            for k in state:
+                np.testing.assert_array_equal(np.asarray(got2[k]), state[k])
+        finally:
+            srv.close()
+
+    def test_restore_streaming_through_peers(self, tmp_path, rng):
+        store, state = make_store(tmp_path, rng)
+        rt, srv = self._fabric(tmp_path, store)
+        try:
+            template = {k: np.zeros_like(v) for k, v in state.items()}
+            got, _ = store.restore(template, streaming=True, chunk_pool=rt)
+            for k in state:
+                np.testing.assert_array_equal(np.asarray(got[k]), state[k])
+            assert rt.stats["peer_hits"] + rt.stats["local_hits"] > 0
+        finally:
+            srv.close()
+
+    def test_empty_peer_falls_back_to_store(self, tmp_path, rng):
+        store, state = make_store(tmp_path, rng)
+        rt, srv = self._fabric(tmp_path, store, seed_peer=False)
+        try:
+            template = {k: np.zeros_like(v) for k, v in state.items()}
+            got, _ = store.restore(template, chunk_pool=rt)
+            for k in state:
+                np.testing.assert_array_equal(np.asarray(got[k]), state[k])
+            assert rt.stats["store_reads"] > 0
+            assert rt.stats["peer_hits"] == 0
+        finally:
+            srv.close()
+
+
+class TestWarmPrefetch:
+    def test_warm_restore_from_peers(self, tmp_path, rng):
+        store, state = make_store(tmp_path, rng)
+        local = ChunkPool(str(tmp_path / "local" / "chunks"))
+        peer = ChunkPool(str(tmp_path / "peer" / "chunks"))
+        for h, path in store.pool.all_chunks():
+            with open(path, "rb") as f:
+                peer.write(h, f.read(), sync_dir=False)
+        srv = px.PeerChunkServer(peer).start()
+        try:
+            rt = px.ReadThroughPool(local, px.PeerChunkClient([srv.address]),
+                                    store.pool)
+            refs = manifest_refs(store)
+            assert refs
+            res = px.warm_restore_from_peers(rt, refs, batch=2)
+            assert res["warmed"] == len(refs)
+            assert res["missed"] == 0
+            # everything is local now: the restore never leaves the box
+            res2 = px.warm_restore_from_peers(rt, refs)
+            assert res2["already_local"] == len(refs)
+            template = {k: np.zeros_like(v) for k, v in state.items()}
+            got, _ = store.restore(template, chunk_pool=rt)
+            for k in state:
+                np.testing.assert_array_equal(np.asarray(got[k]), state[k])
+            assert rt.stats["store_reads"] == 0
+        finally:
+            srv.close()
+
+
+class TestPeerFaults:
+    def test_peer_dies_mid_transfer_store_fallback_bit_identical(
+            self, tmp_path, rng):
+        # the serving peer announces the full frame, ships half, drops the
+        # connection — the client must treat it as a miss (short read), and
+        # the read-through restore must come back bit-identical via the store
+        store, state = make_store(tmp_path, rng)
+        local = ChunkPool(str(tmp_path / "local" / "chunks"))
+        peer = ChunkPool(str(tmp_path / "peer" / "chunks"))
+        for h, path in store.pool.all_chunks():
+            with open(path, "rb") as f:
+                peer.write(h, f.read(), sync_dir=False)
+        srv = px.PeerChunkServer(peer).start()
+        try:
+            client = px.PeerChunkClient([srv.address], timeout_s=0.5)
+            rt = px.ReadThroughPool(local, client, store.pool)
+            template = {k: np.zeros_like(v) for k, v in state.items()}
+            plan = faults.FaultPlan().add("peer.send", nth=1, count=-1,
+                                          error="crash")
+            with faults.active(plan):
+                got, _ = store.restore(template, chunk_pool=rt)
+            assert plan.fired()
+            for k in state:
+                np.testing.assert_array_equal(np.asarray(got[k]), state[k])
+            # every chunk came off the durable store, none off the dying peer
+            assert rt.stats["store_reads"] > 0
+            assert rt.stats["peer_hits"] == 0
+        finally:
+            srv.close()
+
+    def test_unreachable_peer_fault_store_fallback(self, tmp_path, rng):
+        store, state = make_store(tmp_path, rng)
+        local = ChunkPool(str(tmp_path / "local" / "chunks"))
+        peer = ChunkPool(str(tmp_path / "peer" / "chunks"))
+        srv = px.PeerChunkServer(peer).start()
+        try:
+            rt = px.ReadThroughPool(local, px.PeerChunkClient([srv.address]),
+                                    store.pool)
+            plan = faults.FaultPlan().add("peer.fetch", nth=1, count=-1,
+                                          error="etimedout")
+            template = {k: np.zeros_like(v) for k, v in state.items()}
+            with faults.active(plan):
+                got, _ = store.restore(template, chunk_pool=rt)
+            assert plan.fired()
+            for k in state:
+                np.testing.assert_array_equal(np.asarray(got[k]), state[k])
+            assert rt.stats["store_reads"] > 0
+        finally:
+            srv.close()
+
+    def test_partial_peer_loss_still_warms_from_survivor(self, tmp_path, rng):
+        # two peers hold the chunks; the first dies mid-transfer every time,
+        # the second answers — fetch must land without touching the store
+        store, state = make_store(tmp_path, rng)
+        pools, servers = [], []
+        for name in ("a", "b"):
+            p = ChunkPool(str(tmp_path / name / "chunks"))
+            for h, path in store.pool.all_chunks():
+                with open(path, "rb") as f:
+                    p.write(h, f.read(), sync_dir=False)
+            pools.append(p)
+            servers.append(px.PeerChunkServer(p).start())
+        try:
+            dying = servers[0].pool.root
+            plan = faults.FaultPlan().add("peer.send", nth=1, count=-1,
+                                          error="crash", path_substr=dying)
+            client = px.PeerChunkClient([s.address for s in servers],
+                                        timeout_s=0.5)
+            refs = manifest_refs(store)
+            with faults.active(plan):
+                for ref in refs:
+                    data = client.fetch(ref)
+                    assert data is not None
+                    assert chunkstore.chunk_content_ok(ref, data)
+            assert client.stats["hits"] == len(refs)
+        finally:
+            for s in servers:
+                s.close()
+
+
+class TestFleetSeeding:
+    def test_notice_window_seeds_survivors(self, tmp_path):
+        clock = VirtualClock()
+        store = CheckpointStore(str(tmp_path / "store"), time_fn=clock.now)
+        exchange = px.FleetPeerExchange(str(tmp_path / "fabric"), 3)
+        try:
+            spec = FleetSpec(providers=("aws", "gcp", "azure"),
+                             schedules=(PeriodicEviction(150.0),
+                                        NoEviction(), NoEviction()),
+                             provisioning_delay_s=60.0)
+            fleet = FleetCoordinator(store, CheckpointPolicy.transparent(100.0),
+                                     clock, spec, time_model=TimeModel(),
+                                     peer_exchange=exchange)
+            rep = fleet.run(total_steps=40, step_time_s=10.0)
+            assert rep.completed
+            assert fleet.peer_seed_events, "eviction notice never seeded peers"
+            ev = fleet.peer_seed_events[0]
+            assert ev["survivors"] == 2
+            assert ev["chunks"] > 0
+            assert rep.checkpoints["peer_seed_events"] == \
+                len(fleet.peer_seed_events)
+            assert rep.checkpoints["peer_seeded_chunks"] > 0
+            assert rep.checkpoints["peer_seeded_bytes"] > 0
+            # the pushed chunks really landed in the survivors' local pools
+            seeded = [sum(1 for _ in pool.all_chunks())
+                      for i, (pool, _srv) in enumerate(exchange.members)
+                      if i != ev["member"]]
+            assert all(n > 0 for n in seeded)
+        finally:
+            exchange.close()
+
+    def test_rescale_events_carry_fingerprint_counts(self, tmp_path):
+        clock = VirtualClock()
+        store = CheckpointStore(str(tmp_path / "store"), time_fn=clock.now)
+        spec = FleetSpec(providers=("aws", "gcp"),
+                         schedules=(PeriodicEviction(200.0), NoEviction()),
+                         provisioning_delay_s=60.0)
+        fleet = FleetCoordinator(store, CheckpointPolicy.transparent(100.0),
+                                 clock, spec, time_model=TimeModel())
+        rep = fleet.run(total_steps=40, step_time_s=10.0)
+        assert rep.completed
+        assert fleet.rescale_events
+        planned = [ev for ev in fleet.rescale_events if "mesh_shape" in ev]
+        assert planned
+        for ev in planned:
+            assert "fingerprints_kept" in ev
+            assert "fingerprints_dropped" in ev
+
+
+class TestLaneDiscipline:
+    """SPOT011 mutation coverage: the new restore-window submit sites are
+    lane-correct, and the rule would catch them drifting to the encode lane."""
+
+    REAL = ["src/repro/checkpoint/peer_exchange.py",
+            "src/repro/checkpoint/sharded.py"]
+
+    def _mirror(self, tmp_path, relpath: str) -> Path:
+        target = tmp_path / relpath
+        target.parent.mkdir(parents=True, exist_ok=True)
+        shutil.copy(REPO / relpath, target)
+        return target
+
+    @pytest.mark.parametrize("relpath", REAL)
+    def test_restore_submit_sites_clean(self, tmp_path, relpath):
+        target = self._mirror(tmp_path, relpath)
+        codes = {f.code for f in analyze([str(target)])}
+        assert "SPOT011" not in codes
+
+    @pytest.mark.parametrize("relpath", REAL)
+    def test_lane_drift_is_caught(self, tmp_path, relpath):
+        # mutate restore_executor() -> codec_executor(): every restore-path
+        # submit site must light up SPOT011, proving the rule covers them
+        target = self._mirror(tmp_path, relpath)
+        src = target.read_text()
+        assert "restore_executor()" in src
+        target.write_text(src.replace("restore_executor()",
+                                      "codec_executor()"))
+        codes = {f.code for f in analyze([str(target)])}
+        assert "SPOT011" in codes
+
+
+class TestRestoreBarrier:
+    def test_streaming_restores_rendezvous(self, tmp_path, rng):
+        # three "processes" (threads) restore the same checkpoint; with the
+        # simulated barrier installed, none returns before all reach the
+        # spoton:restore_streaming sync point
+        store, state = make_store(tmp_path, rng)
+        template = {k: np.zeros_like(v) for k, v in state.items()}
+        results, errors = [None] * 3, []
+        barrier = multihost.SimulatedBarrier(3, timeout_s=30.0)
+
+        def restore(i):
+            try:
+                got, _ = store.restore(template, streaming=True)
+                results[i] = got
+            except Exception as e:            # pragma: no cover - diagnostics
+                errors.append(e)
+
+        with multihost.use_simulated_barrier(barrier):
+            threads = [threading.Thread(target=restore, args=(i,))
+                       for i in range(3)]
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join(timeout=60.0)
+        assert not errors
+        for got in results:
+            assert got is not None
+            for k in state:
+                np.testing.assert_array_equal(np.asarray(got[k]), state[k])
+
+    def test_lost_participant_breaks_loudly(self):
+        barrier = multihost.SimulatedBarrier(2, timeout_s=0.2)
+        with pytest.raises(RuntimeError, match="broken"):
+            barrier.wait("spoton:restore_streaming")
+
+    def test_no_barrier_installed_is_a_noop(self):
+        multihost.sync_global_devices("spoton:restore_streaming")

@@ -1,0 +1,341 @@
+"""Pod-scale sharded restore: range-addressed region reads (shard-span map
+and prefix-sum chunk selection, boundary chunks, fallbacks), rescale-stable
+fingerprint keys through elastic 2→3→2 topology changes, and multi-device
+per-shard streaming bit-identity."""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import CheckpointStore, DeviceDeltaTracker
+from repro.checkpoint import manifest as mf
+from repro.checkpoint.device_delta import stable_piece_key
+from repro.core.elastic import MeshPlan, fleet_mesh_plan, member_addressable
+from repro.distributed import addressable_shard_spans
+
+CHUNK = 2048                     # 8 rows of a (*, 64) float32 leaf per chunk
+
+
+def _state(rng, *, rows=256, cols=64):
+    # one compressible leaf (zlib chunks) + one incompressible (raw chunks):
+    # both chunk codecs cross the boundary-decode path
+    ramp = np.tile(np.arange(cols, dtype=np.float32), (rows, 1))
+    return {"ramp": ramp,
+            "noise": rng.normal(size=(rows, cols)).astype(np.float32)}
+
+
+@pytest.fixture
+def saved(tmp_path, rng):
+    store = CheckpointStore(str(tmp_path), chunk_size=CHUNK)
+    state = _state(rng)
+    store.save(3, state)
+    man, reader = store.latest_valid()
+    yield store, state, reader
+    reader.close()
+
+
+class TestRegionReads:
+    def test_manifest_carries_shard_span_map(self, saved):
+        _store, _state_, reader = saved
+        for name in ("ramp", "noise"):
+            rec = reader.single_piece_record(name)
+            assert rec is not None and "chunks" in rec
+            assert "shard_spans" in rec
+            spans = mf.record_shard_spans(rec)
+            assert spans is not None
+            assert len(spans) == len(rec["chunks"])
+            # spans tile the row axis: start at 0, end at the last row
+            assert spans[0][0] == 0
+            assert spans[-1][1] == rec["shape"][0]
+
+    @pytest.mark.parametrize("region_rows", [(0, 256), (8, 16), (3, 29),
+                                             (248, 256), (0, 1)])
+    def test_region_read_bit_identical(self, saved, region_rows):
+        _store, state, reader = saved
+        a, b = region_rows
+        for name in ("ramp", "noise"):
+            region = ((a, b), (0, 64))
+            got = reader.read_region_streaming(name, region)
+            assert got is not None
+            np.testing.assert_array_equal(got, state[name][a:b])
+            np.testing.assert_array_equal(
+                got, np.asarray(reader.read_slice(name, region)))
+
+    def test_small_region_skips_chunks(self, saved):
+        _store, state, reader = saved
+        got = reader.read_region_streaming("noise", ((8, 16), (0, 64)))
+        np.testing.assert_array_equal(got, state["noise"][8:16])
+        st = reader.region_stats
+        assert st["region_reads"] == 1
+        # 64 KiB payload in 2 KiB chunks: an 8-row (one-chunk) region must
+        # decode O(region), not O(tensor)
+        assert st["chunks_decoded"] <= 2
+        assert st["chunks_skipped"] >= 30
+
+    def test_prefix_sum_path_matches_span_map(self, saved):
+        # strip the optional shard-span map: chunk selection falls back to
+        # raw_len prefix sums and must pick the same bytes
+        _store, state, reader = saved
+        rec = reader.single_piece_record("noise")
+        assert rec.pop("shard_spans", None) is not None
+        got = reader.read_region_streaming("noise", ((3, 29), (0, 64)))
+        np.testing.assert_array_equal(got, state["noise"][3:29])
+        assert reader.region_stats["chunks_skipped"] > 0
+
+    def test_corrupt_span_map_is_rejected_not_trusted(self, saved):
+        _store, state, reader = saved
+        rec = reader.single_piece_record("noise")
+        # truncated map: wrong length must invalidate the whole map
+        rec["shard_spans"] = rec["shard_spans"][:-1]
+        assert mf.record_shard_spans(rec) is None
+        # a read through the corrupt record still comes back bit-identical
+        # (prefix sums take over)
+        got = reader.read_region_streaming("noise", ((8, 16), (0, 64)))
+        np.testing.assert_array_equal(got, state["noise"][8:16])
+        # non-monotonic map: a gap in the tiling could skip needed chunks
+        n = len(rec["chunks"])
+        rec["shard_spans"] = [[i * 100 + 50, i * 100] for i in range(n)]
+        assert mf.record_shard_spans(rec) is None
+
+    def test_trailing_axis_slice_falls_back(self, saved):
+        _store, state, reader = saved
+        region = ((0, 8), (0, 32))   # not flat-contiguous in C order
+        assert reader.read_region_streaming("noise", region) is None
+        got = reader.read_region_for_restore("noise", region)
+        np.testing.assert_array_equal(np.asarray(got),
+                                      state["noise"][0:8, 0:32])
+        assert reader.region_stats["fallback_reads"] == 1
+
+    def test_v1_records_fall_back(self, tmp_path, rng):
+        store = CheckpointStore(str(tmp_path / "v1"), mode="full")
+        state = _state(rng, rows=32)
+        store.save(1, state)
+        _man, reader = store.latest_valid()
+        try:
+            assert reader.read_region_streaming("noise", ((0, 8), (0, 64))) \
+                is None
+            got = reader.read_region_for_restore("noise", ((0, 8), (0, 64)))
+            np.testing.assert_array_equal(np.asarray(got), state["noise"][:8])
+            assert reader.region_stats["fallback_reads"] == 1
+        finally:
+            reader.close()
+
+    def test_chunk_byte_offsets_and_span_map_helpers(self):
+        rec = {"chunks": [{"r": 100}, {"r": 100}, {"r": 56}]}
+        assert mf.chunk_byte_offsets(rec) == [0, 100, 200, 256]
+        # 256 payload bytes, 16 bytes/row -> 16 rows tiled by ceil division
+        spans = mf.shard_span_map((16, 4), 16, [100, 100, 56])
+        assert spans == [[0, 7], [6, 13], [12, 16]]
+        assert mf.shard_span_map((), 16, [100]) is None
+        assert mf.shard_span_map((16, 4), 0, [100]) is None
+
+
+class TestAddressableShardSpans:
+    def test_single_device_whole_leaf(self):
+        x = jax.device_put(np.arange(12, dtype=np.float32).reshape(3, 4))
+        spans = addressable_shard_spans(x.sharding, (3, 4))
+        assert spans == [((0, 3), (0, 4))]
+
+
+class TestStablePieceKeys:
+    def test_offset_is_global_and_row_major(self):
+        # piece at global rows [2, 4) of an (8, 8) float32 leaf
+        assert stable_piece_key("w", ((2, 4), (0, 8)), (8, 8), "float32") == \
+            ("w", 2 * 8 * 4)
+        # replicated / whole-tensor pieces sit at offset 0
+        assert stable_piece_key("w", ((0, 8), (0, 8)), (8, 8), "float32") == \
+            ("w", 0)
+        assert stable_piece_key("w", None, None, "float32") == ("w", 0)
+        # column offset scales by the innermost stride
+        assert stable_piece_key("w", ((0, 8), (4, 8)), (8, 8), "bfloat16") == \
+            ("w", 4 * 2)
+
+    def test_topology_independent(self):
+        # the same global piece gets the same key no matter how many other
+        # pieces the saving topology had — that is the rescale-remap property
+        k4 = stable_piece_key("w", ((6, 8), (0, 8)), (8, 8), "float32")
+        k2 = stable_piece_key("w", ((4, 8), (0, 8)), (8, 8), "float32")
+        assert k4 == ("w", 192) and k2 == ("w", 128)
+
+
+class TestMemberAddressable:
+    def test_dp_only_owns_everything(self):
+        plan = fleet_mesh_plan(3, model_parallel=1)
+        owns = member_addressable(plan, 1)
+        assert owns("w", 0, 10_000, 10_000)
+        assert owns("w", 123, 456, 10_000)
+
+    def test_model_parallel_partitions_byte_spans(self):
+        plan = MeshPlan((1, 2), ("data", "model"))
+        m0 = member_addressable(plan, 0)
+        m1 = member_addressable(plan, 1)
+        assert m0("w", 0, 50, 100) and not m0("w", 50, 100, 100)
+        assert m1("w", 50, 100, 100) and not m1("w", 0, 50, 100)
+        # straddling spans belong to nobody: they must re-seed
+        assert not m0("w", 25, 75, 100) and not m1("w", 25, 75, 100)
+        # members fill the model axis fastest
+        m2 = member_addressable(plan, 2)
+        assert m2("w", 0, 50, 100)
+
+
+def _tracker_for(store):
+    return DeviceDeltaTracker(store.pool, chunk_size=store.chunk_size,
+                              compress=store.compress,
+                              quantize_moments=store.quantize_moments)
+
+
+class TestRescaleStableFingerprints:
+    def test_2_3_2_rescale_keeps_fingerprints_and_delta_win(self, tmp_path,
+                                                            rng):
+        store = CheckpointStore(str(tmp_path), chunk_size=CHUNK)
+        tracker = _tracker_for(store)
+        state = {
+            "w": jnp.asarray(rng.normal(size=(512, 64)).astype(np.float32)),
+            "b": jnp.asarray(
+                rng.normal(size=(64 * 1024,)).astype(np.float32)),
+        }
+        store.save(0, state, tracker=tracker)
+        state["w"] = state["w"].at[0, 0].add(1.0)
+        info1 = store.save(1, state, tracker=tracker)
+        assert info1.d2h_bytes_skipped > 0          # tracker warm + engaged
+
+        # elastic 2 -> 3 -> 2: data-parallel fleet (model degree 1) keeps
+        # every surviving-shard fingerprint at every step of the sequence
+        kept_total = 0
+        for n_alive in (3, 2):
+            plan = fleet_mesh_plan(n_alive, model_parallel=1)
+            res = tracker.rescale(member_addressable(plan, 0))
+            assert res["dropped"] == 0
+            assert res["kept"] >= 2                 # both tracked leaves
+            kept_total = res["kept"]
+        assert tracker.stats["rescale_events"] == 2
+        assert tracker.stats["fp_kept"] >= 2 * kept_total
+        assert tracker.stats["fp_dropped"] == 0
+
+        # the next delta save still skips clean blocks: the D2H win
+        # survived the topology changes instead of re-transferring the world
+        state["w"] = state["w"].at[1, 0].add(1.0)
+        info2 = store.save(2, state, tracker=tracker)
+        full = sum(np.asarray(v).nbytes for v in state.values())
+        assert info2.d2h_bytes_skipped > 0
+        assert info2.d2h_bytes < full / 2
+
+        # restores from post-rescale delta saves stay bit-identical
+        tpl = {k: np.zeros_like(np.asarray(v)) for k, v in state.items()}
+        got, man = store.restore(tpl)
+        assert man.step == 2
+        for k, v in state.items():
+            np.testing.assert_array_equal(np.asarray(got[k]), np.asarray(v))
+
+    def test_rescale_drops_only_nonaddressable_spans(self, tmp_path, rng):
+        # a model-parallel re-plan drops exactly the spans the member no
+        # longer owns; whole-leaf pieces at offset 0 survive for member 0
+        store = CheckpointStore(str(tmp_path), chunk_size=CHUNK)
+        tracker = _tracker_for(store)
+        state = {"w": jnp.asarray(
+            rng.normal(size=(512, 64)).astype(np.float32))}
+        store.save(0, state, tracker=tracker)
+        state["w"] = state["w"].at[0, 0].add(1.0)
+        store.save(1, state, tracker=tracker)
+
+        # member 1 under model=2 owns the upper half of each leaf's bytes:
+        # a single whole-leaf piece spanning [0, total) is not addressable
+        plan = MeshPlan((1, 2), ("data", "model"))
+        res = tracker.rescale(member_addressable(plan, 1))
+        assert res["kept"] == 0 and res["dropped"] >= 1
+        # dropped entries mean the next save re-seeds (full path), never
+        # a wrong skip
+        info = store.save(2, state, tracker=tracker)
+        assert info.d2h_bytes >= np.asarray(state["w"]).nbytes
+        got, _ = store.restore({"w": np.zeros((512, 64), np.float32)})
+        np.testing.assert_array_equal(np.asarray(got["w"]),
+                                      np.asarray(state["w"]))
+
+    def test_rescale_keeps_addressable_synthetic_spans(self, tmp_path, rng):
+        # surviving-shard fraction: with per-shard entries, a member keeps
+        # exactly the fraction of fingerprints whose spans it still owns
+        store = CheckpointStore(str(tmp_path), chunk_size=CHUNK)
+        tracker = _tracker_for(store)
+        state = {
+            "lo": jnp.asarray(rng.normal(size=(256, 64)).astype(np.float32)),
+            "hi": jnp.asarray(rng.normal(size=(256, 64)).astype(np.float32)),
+        }
+        store.save(0, state, tracker=tracker)
+        state["lo"] = state["lo"].at[0, 0].add(1.0)
+        store.save(1, state, tracker=tracker)
+
+        # predicate that keeps "lo" (owned) and rejects "hi" (moved away):
+        # stands in for a mixed-ownership re-plan without needing devices
+        res = tracker.rescale(lambda name, lo, hi, total: name == "lo")
+        assert res["kept"] == 1 and res["dropped"] == 1
+        assert tracker.stats["fp_kept"] == 1
+        assert tracker.stats["fp_dropped"] == 1
+
+
+MULTIDEV_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import sys
+    import numpy as np
+    import jax, jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.checkpoint import CheckpointStore
+    from repro.distributed import addressable_shard_spans
+    from repro.launch.mesh import make_mesh
+
+    td = sys.argv[1]
+    mesh = make_mesh((4, 2), ("data", "model"))
+    sh = NamedSharding(mesh, P("data", None))
+    w = jax.device_put(
+        jnp.arange(64 * 32, dtype=jnp.float32).reshape(64, 32), sh)
+    state = {"w": w, "b": jnp.ones((64,), jnp.float32)}
+    store = CheckpointStore(td, chunk_size=2048)
+    store.save(5, state)
+
+    # per-shard enqueue plans one region per distinct addressable shard:
+    # P("data", None) over a (4, 2) mesh -> 4 distinct row bands
+    spans = addressable_shard_spans(sh, (64, 32))
+    assert len(spans) == 4, spans
+    assert sorted(spans) == [(((16 * i, 16 * (i + 1))), (0, 32))
+                             for i in range(4)], spans
+
+    # streaming restore onto a *different* mesh: per-shard region reads +
+    # restore barrier, bit-identical to the serial path
+    mesh2 = make_mesh((2, 4), ("data", "model"))
+    sh2 = NamedSharding(mesh2, P("data", "model"))
+    tpl = {"w": jax.ShapeDtypeStruct((64, 32), jnp.float32, sharding=sh2),
+           "b": jnp.zeros((64,), jnp.float32)}
+    got, man = store.restore(tpl, streaming=True)
+    got_serial, _ = store.restore(tpl, streaming=False)
+    assert np.array_equal(np.asarray(got["w"]), np.asarray(w))
+    assert np.array_equal(np.asarray(got["w"]), np.asarray(got_serial["w"]))
+    assert np.array_equal(np.asarray(got["b"]), np.ones((64,), np.float32))
+
+    # a multi-piece record (one piece per saved shard) cannot be
+    # range-addressed as one byte run -> read_region_for_restore must fall
+    # back to the always-correct assembly path, bit-identically
+    _man, reader = store.latest_valid()
+    assert reader.read_region_streaming("w", ((16, 32), (0, 32))) is None
+    a = reader.read_region_for_restore("w", ((16, 32), (0, 32)))
+    assert np.array_equal(np.asarray(a), np.asarray(w)[16:32])
+    assert reader.region_stats["fallback_reads"] >= 1
+    reader.close()
+    print("POD_STREAM_OK")
+""")
+
+
+def test_multidevice_streaming_restore_bit_identical(tmp_path):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    proc = subprocess.run([sys.executable, "-c", MULTIDEV_SCRIPT,
+                           str(tmp_path)],
+                          capture_output=True, text=True, env=env, timeout=300)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "POD_STREAM_OK" in proc.stdout

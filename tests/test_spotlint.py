@@ -37,6 +37,7 @@ FIXTURE_FILES = [
     "escaping_view.py",
     "abba_locks.py",
     "unbounded_retry.py",
+    "peer_under_lock.py",
 ]
 
 
