@@ -32,6 +32,15 @@ Legs:
   (spot_sim provisioning gap + measured warm restore wall). The warm figure
   gates CI at ≥1.5× the frozen cold baseline.
 
+* **object store** (wall time): the same committed checkpoint with its
+  chunks in an in-process S3-style store behind a modeled link (2 ms
+  per-op latency, reads/writes serialize at 1 GB/s — a same-region object
+  store). Cold: the replacement's read-through cache is wiped each rep, so
+  every chunk is a verified ranged GET across the link; warm: the cache
+  holds every chunk and restore is the untouched local mmap path. The warm
+  figure gates CI at ≥1.5× the frozen cold baseline — the read-through
+  cache earning its disk.
+
 * **simulated MTTR** (virtual time): a transparent-mode spot run with
   periodic evictions; reports the coordinator's measured
   eviction→first-step-back windows (provisioning + restore + recompile +
@@ -440,6 +449,74 @@ def bench_pod_restore(n_members: int = 3) -> dict:
     return results
 
 
+def bench_object_store() -> dict:
+    """Object-store leg: cold ranged-GET restore vs warm local-cache restore.
+
+    The committed checkpoint's chunks live in an in-process S3-style store
+    behind a modeled link (2 ms per-op latency, reads serialize at 1 GB/s —
+    a same-region object store). Cold: the replacement's read-through cache
+    is wiped each rep, so every chunk crosses the link as a verified ranged
+    GET and lands in the cache on the way through. Warm: the cache already
+    holds every chunk, so restore is the untouched local mmap path and the
+    server sees zero additional GETs. The warm/cold ratio is the
+    read-through cache earning its disk; CI gates warm ≥ ``OBJSTORE_GATE_X``
+    × the frozen cold figure."""
+    import shutil
+
+    import jax
+
+    from repro.checkpoint import CheckpointStore
+    from repro.checkpoint import backend as chunk_backend
+    from repro.train import state_template_on_device
+
+    state = fixture_state()
+    nbytes = sum(a.nbytes for a in jax.tree.leaves(state)
+                 if hasattr(a, "nbytes"))
+    dev_tpl = state_template_on_device(state)
+    results: dict = {}
+    server = chunk_backend.InProcessObjectStore(
+        network=chunk_backend.NetworkModel(latency_s=0.002, gbps=1.0))
+    with tempfile.TemporaryDirectory() as td:
+        store = CheckpointStore(os.path.join(td, "store"), compress=False,
+                                quantize_moments=True,
+                                backend=chunk_backend.ObjectStoreBackend(
+                                    server))
+        store.save(7, state)
+        cache_root = store.pool.root
+        cold_walls, warm_walls = [], []
+        gets_before_warm = 0
+        for _ in range(REPS):
+            # cold: empty cache, every chunk is a ranged GET over the link
+            shutil.rmtree(cache_root, ignore_errors=True)
+            t0 = time.perf_counter()
+            got, _ = store.restore(dev_tpl, streaming=True)
+            jax.block_until_ready(got)
+            cold_walls.append(time.perf_counter() - t0)
+
+            # warm: the cold pass populated the cache; the link goes quiet
+            gets_before_warm = server.stats["gets"]
+            t0 = time.perf_counter()
+            got, _ = store.restore(dev_tpl, streaming=True)
+            jax.block_until_ready(got)
+            warm_walls.append(time.perf_counter() - t0)
+        warm_gets = server.stats["gets"] - gets_before_warm
+        pool_stats = dict(store.pool.stats)
+
+    cold, warm = min(cold_walls), min(warm_walls)
+    results["objstore_cold_restore_GBps"] = round(nbytes / cold / 1e9, 3)
+    results["objstore_restore_GBps"] = round(nbytes / warm / 1e9, 3)
+    results["objstore_warm_vs_cold_x"] = round(cold / warm, 2)
+    results["objstore_warm_gets"] = warm_gets
+    results["objstore_cache_hits"] = pool_stats.get("cache_hits", 0)
+    results["objstore_backend_reads"] = pool_stats.get("backend_reads", 0)
+    print(f"objstore_restore,"
+          f"warm={results['objstore_restore_GBps']}_GBps,"
+          f"cold={results['objstore_cold_restore_GBps']}_GBps,"
+          f"x={results['objstore_warm_vs_cold_x']},"
+          f"warm_gets={warm_gets}")
+    return results
+
+
 def bench_mttr() -> dict:
     from .common import run_row
 
@@ -472,6 +549,10 @@ CONTENDED_GATE_X = 3.0
 # the same box — the CI smoke gate for the peer exchange
 POD_GATE_X = 1.5
 
+# warm (read-through-cached) restore must beat the frozen cold object-store
+# figure by at least this — the CI smoke gate for the backend cache
+OBJSTORE_GATE_X = 1.5
+
 
 def main() -> dict:
     results = bench_restore_to_device()
@@ -479,6 +560,7 @@ def main() -> dict:
         results.update(bench_contended_restore(n_writers))
     results.update(bench_restore_storm())
     results.update(bench_pod_restore())
+    results.update(bench_object_store())
     results.update(bench_mttr())
     from repro.checkpoint import codec_sched
     sched = codec_sched.snapshot_stats()
@@ -517,6 +599,11 @@ def main() -> dict:
     doc["baseline"].setdefault(
         "pod_cold_restore_GBps",
         results.get("pod_restore_cold_GBps", 0.0))
+    # the cold object-store restore over the modeled link, frozen the same
+    # way: first run seeds it, reruns never overwrite it
+    doc["baseline"].setdefault(
+        "objstore_cold_restore_GBps",
+        results.get("objstore_cold_restore_GBps", 0.0))
     base = doc["baseline"].get("restore_to_device_GBps", 0.0)
     cur = results.get("streaming_restore_to_device_GBps", 0.0)
     if base:
@@ -534,6 +621,12 @@ def main() -> dict:
         results["pod_speedup_vs_frozen_cold"] = round(pcur / pbase, 2)
         print(f"pod_speedup_vs_frozen_cold,"
               f"{results['pod_speedup_vs_frozen_cold']}x")
+    obase = doc["baseline"].get("objstore_cold_restore_GBps", 0.0)
+    ocur = results.get("objstore_restore_GBps", 0.0)
+    if obase:
+        results["objstore_speedup_vs_frozen_cold"] = round(ocur / obase, 2)
+        print(f"objstore_speedup_vs_frozen_cold,"
+              f"{results['objstore_speedup_vs_frozen_cold']}x")
     doc["current"] = results
     with open(path, "w") as f:
         json.dump(doc, f, indent=2)
@@ -552,6 +645,13 @@ def main() -> dict:
         raise SystemExit(
             f"peer exchange regression: pod warm restore {pcur} GB/s < "
             f"{POD_GATE_X}x frozen cold baseline {pbase} GB/s")
+    # object-store smoke gate: the read-through cache must keep warm
+    # restores clearly above the modeled-link cold figure, or the backend
+    # pool is re-fetching what it already holds
+    if obase and ocur < OBJSTORE_GATE_X * obase:
+        raise SystemExit(
+            f"backend cache regression: warm objstore restore {ocur} GB/s < "
+            f"{OBJSTORE_GATE_X}x frozen cold baseline {obase} GB/s")
     return results
 
 

@@ -52,6 +52,12 @@ BLOCKING_METHODS = {
     # timeout — fetch/push (PeerChunkClient), sendall/recv/recv_into/
     # accept/connect (raw sockets) all wait on the network
     "sendall", "recv", "recv_into", "connect", "accept", "fetch", "push",
+    # object-store ChunkBackend client surface (checkpoint.backend): every
+    # one of these rides the network (or a modeled link) and may burn a full
+    # bounded-retry cycle — under the pool's tracker lock that serializes
+    # all writers behind one flaky endpoint
+    "get_range", "put", "complete_multipart", "create_multipart",
+    "upload_part", "head",
 }
 
 

@@ -19,11 +19,11 @@ import argparse
 import os
 import sys
 
-from . import crash_consistency, lanes, lifetimes, locks, retries
+from . import crash_consistency, lanes, lifetimes, locks, netguard, retries
 from .core import (BaselineEntry, Finding, ModuleInfo, RepoModel,
                    load_baseline, load_module, stale_baseline_entries)
 
-RULE_MODULES = (crash_consistency, lanes, lifetimes, locks, retries)
+RULE_MODULES = (crash_consistency, lanes, lifetimes, locks, netguard, retries)
 
 DEFAULT_BASELINE = "spotlint.baseline"
 

@@ -155,6 +155,12 @@ class ChunkRef:
 
 
 class ChunkPool:
+    #: True when this pool's directory tree IS the durable copy, so the
+    #: save must fsync dirty fan-out dirs before its manifest commits.
+    #: Cache-tier pools (``backend.BackendChunkPool``) flip this off — their
+    #: durability bar is "every ref uploaded", not local rename durability.
+    durable_dirs = True
+
     def __init__(self, root: str):
         self.root = root
         # flips True on the first blake2b-era chunk seen (sha1 re-digest
@@ -384,9 +390,10 @@ def store_chunk(pool: ChunkPool, raw_chunk, *, comp: str,
     # encoded payload. ENOSPC and friends are persistent and surface
     # immediately — the coordinator's degradation policy owns those.
     n = _retry().call_with_retry(
-        lambda: pool.write(h, enc, sync_dir=dirty_dirs is None),
+        lambda: pool.write(h, enc, sync_dir=dirty_dirs is None
+                           and pool.durable_dirs),
         describe=f"chunk {h[:10]} write")
-    if n and dirty_dirs is not None:
+    if n and dirty_dirs is not None and pool.durable_dirs:
         dirty_dirs.add(os.path.dirname(pool.path(h)))
     ref = ChunkRef(hash=h, nbytes=len(enc), raw_len=len(raw_chunk),
                    crc32=zlib.crc32(enc), comp=k)

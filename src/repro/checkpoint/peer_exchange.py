@@ -312,7 +312,11 @@ class ReadThroughPool(chunkstore.ChunkPool):
         return self.shared
 
     def chunk_path(self, ref: ChunkRef) -> str:
-        return self._resolve(ref).path(ref.hash)
+        # delegate the hook, not the raw path: a plain pool's chunk_path IS
+        # its path, but a backend cache pool (backend.BackendChunkPool) uses
+        # chunk_path to fault the chunk in from the object store — composing
+        # here gives the full local → peer → object-store resolution order
+        return self._resolve(ref).chunk_path(ref)
 
     def read_view(self, ref: ChunkRef):
         return self._resolve(ref).read_view(ref)

@@ -334,6 +334,13 @@ def write_snapshot_delta(
     overlaps across tensors. Returns (manifest tensor records, bytes
     physically written) — unchanged chunks cost a hash + an mtime touch, so
     the second number is the actual churn, not the state size.
+
+    Durability bar: every chunk a manifest references must be durable before
+    the manifest commits. For a POSIX pool (``pool.durable_dirs``) that
+    means the per-save dir-fsync barrier below; for a cache-tier pool
+    (``backend.BackendChunkPool``, ``durable_dirs=False``) ``store_chunk``
+    collects no dirty dirs — the pool pipelines backend uploads instead and
+    the store's pre-commit ``flush_uploads`` barrier replaces the fsyncs.
     """
     ex = executor if executor is not None else chunkstore.codec_executor()
     jobs = []

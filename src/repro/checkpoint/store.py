@@ -34,6 +34,7 @@ from concurrent.futures import CancelledError
 from dataclasses import dataclass
 from typing import Any, Callable
 
+from . import backend as backend_mod
 from . import chunkstore
 from . import manifest as mf
 from . import sharded
@@ -55,6 +56,27 @@ class CheckpointInfo:
     d2h_bytes: int = 0
     d2h_bytes_skipped: int = 0
     save_stall_ms: float = 0.0
+    # True when an object-store outage parked this save: the chunks are safe
+    # in the local spool and the staged manifest commits in reconcile once
+    # every ref is durable — latest_valid() does NOT see it yet
+    spooled: bool = False
+
+
+@dataclass
+class _ParkedCommit:
+    """A staged save waiting out an object-store outage: every chunk is in
+    the local spool, the manifest is written in ``stage``, and the commit
+    (rename + marker) runs only after ``upload_now`` confirms all refs
+    durable. The stage stays in the in-flight set and the chunk pins stay
+    held until then — gc treats a parked save exactly like a live writer."""
+
+    stage: str
+    final: str
+    kind: str
+    step: int
+    records: list
+    hashes: set
+    pinned: list
 
 
 class CheckpointStore:
@@ -72,6 +94,7 @@ class CheckpointStore:
         tags: dict | None = None,
         fault_injector: Callable[[str], None] | None = None,
         chunk_sweep_interval_s: float = 60.0,
+        backend: backend_mod.ChunkBackend | None = None,
     ):
         if mode not in ("delta", "full"):
             raise ValueError(f"mode must be 'delta' or 'full', got {mode!r}")
@@ -90,7 +113,18 @@ class CheckpointStore:
         # paid inside every save that drops a retained step
         self.chunk_sweep_interval_s = chunk_sweep_interval_s
         self._last_chunk_sweep = -float("inf")
-        self.pool = chunkstore.ChunkPool(os.path.join(root, chunkstore.CHUNKS_DIRNAME))
+        pool_root = os.path.join(root, chunkstore.CHUNKS_DIRNAME)
+        if backend is not None:
+            # object-store tier: the local tree becomes a read-through cache
+            # and every manifest commit waits on chunk-upload durability
+            self.pool: chunkstore.ChunkPool = backend_mod.BackendChunkPool(
+                pool_root, backend)
+        else:
+            self.pool = chunkstore.ChunkPool(pool_root)
+        # saves parked by an object-store outage, FIFO by step; committed by
+        # reconcile_spooled() once the store is reachable again
+        self._spool_lock = threading.Lock()
+        self._spooled_commits: list[_ParkedCommit] = []
         self._delta_index = chunkstore.DeltaIndex()
         # chunk hashes referenced by saves in flight (manifest not yet
         # committed) — the pool sweep must never remove these
@@ -142,15 +176,87 @@ class CheckpointStore:
         self.fault_injector(name)
         faults.fault_point("commit." + name)
 
+    def _finish_commit(self, stage: str, final: str, kind: str) -> bool:
+        """The replace+mark commit phase: stage → final rename, root fsync
+        overlapped with the COMMITTED marker write. Shared by the normal
+        save path and the outage reconcile path (a parked save commits
+        through exactly the same protocol once its refs are durable).
+        Returns True when this writer committed, False when another fleet
+        member already had."""
+        # The commit-phase IO below (rmtree/replace/mark_committed/root
+        # fsync join) intentionally runs under _commit_lock and is
+        # baseline-suppressed for spotlint SPOT031: the lock exists
+        # precisely to serialize the replace+mark phase across this
+        # store's writers (a same-step commit race must never delete a
+        # committed checkpoint), so the IO *is* the critical section.
+        # Everything that can leave it has: shard/chunk writes, manifest
+        # encode and fsync all happen before the lock; the root-dir
+        # fsync overlaps on an executor lane and only its join remains.
+        # The os.replace is likewise baseline-suppressed for SPOT001:
+        # the source-fsync the rule wants happened in the caller —
+        # write_snapshot's shard/manifest fsyncs (and, on a backend
+        # pool, flush_uploads' durability barrier) all complete before
+        # a stage dir is ever handed to this function.
+        with self._commit_lock:
+            if mf.is_committed(final):
+                # another fleet member already committed this step; the
+                # committed copy captures the same state — never delete
+                # it (our writer may die mid-eviction before re-creating)
+                shutil.rmtree(stage, ignore_errors=True)
+                return False
+            if os.path.exists(final):  # uncommitted leftover: replace
+                shutil.rmtree(final)
+            faults.fault_point("store.replace", final)
+            os.replace(stage, final)
+            faults.fault_point("store.replaced", final,
+                               rollback=(final, stage))
+            # durable, not just atomic: sync the root so a crash
+            # right after the rename can't roll the step dir back.
+            # The root fsync overlaps the marker write — they are
+            # independent (rename rollback removes the whole dir,
+            # marker included: invisible, never inconsistent), and
+            # fsync latency sits inside the eviction-notice window
+            try:
+                root_sync = (chunkstore.urgent_executor()
+                             if kind == "termination" else
+                             chunkstore.codec_executor()).submit(
+                    fsync_dir, self.root)
+            except RuntimeError:
+                # scheduler already shut down (periodic save racing
+                # the atexit hook at interpreter exit): durability
+                # cannot be skipped, fsync inline instead
+                fsync_dir(self.root)
+                root_sync = None
+            self._phase("renamed")
+            try:
+                mf.mark_committed(final)
+            finally:
+                if root_sync is not None:
+                    try:
+                        root_sync.result()
+                    except CancelledError:
+                        # queued fsync swept up by a concurrent
+                        # shutdown(cancel_pending): fsync inline —
+                        # COMMITTED must imply rename durability
+                        fsync_dir(self.root)
+            self._phase("committed")
+            return True
+
     def save_snapshot(self, snapshot: sharded.Snapshot, *, kind: str = "transparent",
                       extra: dict | None = None) -> CheckpointInfo:
         t0 = self.time_fn()
+        if self._spooled_commits:
+            # outage backlog first: parked steps must commit in order before
+            # a newer step lands, and a reachable store drains them cheaply
+            self.reconcile_spooled()
         final = os.path.join(self.root, mf.step_dirname(snapshot.step))
         stage = final + f".tmp-{self._stage_token}-{uuid.uuid4().hex[:8]}"
         os.makedirs(stage, exist_ok=True)
         with self._stage_lock:
             self._inflight_stages.add(stage)
         pinned: list[str] = []
+        we_committed = False
+        parked = False
         try:
             self._phase("staged")
             if self.mode == "delta":
@@ -183,72 +289,46 @@ class CheckpointStore:
                 chunk_size=self.chunk_size if self.mode == "delta" else None)
             mf.write_manifest(stage, man)
             self._phase("manifest_written")
-            we_committed = False
-            # The commit-phase IO below (rmtree/replace/mark_committed/root
-            # fsync join) intentionally runs under _commit_lock and is
-            # baseline-suppressed for spotlint SPOT031: the lock exists
-            # precisely to serialize the replace+mark phase across this
-            # store's writers (a same-step commit race must never delete a
-            # committed checkpoint), so the IO *is* the critical section.
-            # Everything that can leave it has: shard/chunk writes, manifest
-            # encode and fsync all happen before the lock; the root-dir
-            # fsync overlaps on an executor lane and only its join remains.
-            with self._commit_lock:
-                if mf.is_committed(final):
-                    # another fleet member already committed this step; the
-                    # committed copy captures the same state — never delete
-                    # it (our writer may die mid-eviction before re-creating)
-                    shutil.rmtree(stage, ignore_errors=True)
-                else:
-                    if os.path.exists(final):  # uncommitted leftover: replace
-                        shutil.rmtree(final)
-                    faults.fault_point("store.replace", final)
-                    os.replace(stage, final)
-                    faults.fault_point("store.replaced", final,
-                                       rollback=(final, stage))
-                    # durable, not just atomic: sync the root so a crash
-                    # right after the rename can't roll the step dir back.
-                    # The root fsync overlaps the marker write — they are
-                    # independent (rename rollback removes the whole dir,
-                    # marker included: invisible, never inconsistent), and
-                    # fsync latency sits inside the eviction-notice window
-                    try:
-                        root_sync = (chunkstore.urgent_executor()
-                                     if kind == "termination" else
-                                     chunkstore.codec_executor()).submit(
-                            fsync_dir, self.root)
-                    except RuntimeError:
-                        # scheduler already shut down (periodic save racing
-                        # the atexit hook at interpreter exit): durability
-                        # cannot be skipped, fsync inline instead
-                        fsync_dir(self.root)
-                        root_sync = None
-                    self._phase("renamed")
-                    try:
-                        mf.mark_committed(final)
-                    finally:
-                        if root_sync is not None:
-                            try:
-                                root_sync.result()
-                            except CancelledError:
-                                # queued fsync swept up by a concurrent
-                                # shutdown(cancel_pending): fsync inline —
-                                # COMMITTED must imply rename durability
-                                fsync_dir(self.root)
-                    we_committed = True
-                    self._phase("committed")
+            # Durability barrier before commit: with an object-store backend
+            # every pipelined chunk upload must have landed before the
+            # manifest may reference it. A non-empty undurable set means the
+            # store is out — park the staged commit in the spool instead.
+            undurable: set[str] = set()
+            flush = getattr(self.pool, "flush_uploads", None)
+            if flush is not None:
+                undurable = flush(set(pinned))
+            self._phase("uploads_flushed")
+            if undurable:
+                with self._spool_lock:
+                    self._spooled_commits.append(_ParkedCommit(
+                        stage=stage, final=final, kind=kind,
+                        step=snapshot.step, records=records,
+                        hashes=set(pinned), pinned=list(pinned)))
+                parked = True
+                logging.getLogger("spoton").warning(
+                    "object store outage: step %d save spooled locally "
+                    "(%d chunks awaiting upload); manifest parked until "
+                    "reconcile", snapshot.step, len(undurable))
+            else:
+                we_committed = self._finish_commit(stage, final, kind)
         except BaseException:
             # leave staging dir for post-mortem; it is invisible to readers
             raise
         finally:
-            with self._stage_lock:
-                self._inflight_stages.discard(stage)
-            self._unpin_all(pinned)
-        if we_committed and snapshot.on_committed is not None:
+            # a parked save stays a live writer: its stage must survive gc
+            # and its chunk pins must hold until reconcile commits it
+            if not parked:
+                with self._stage_lock:
+                    self._inflight_stages.discard(stage)
+                self._unpin_all(pinned)
+        if (we_committed or parked) and snapshot.on_committed is not None:
             # device-delta bookkeeping: the snapshot's fingerprints + chunk
             # refs become the next save's comparison point only now that the
-            # manifest referencing them is durably committed. Never fatal —
-            # a tracker hiccup costs the next save its delta, not the save.
+            # manifest referencing them is durably committed — or parked with
+            # its chunks pinned in the spool, which keeps delta continuity for
+            # this process (the parked refs are locally present and protected
+            # from gc until reconcile commits them). Never fatal — a tracker
+            # hiccup costs the next save its delta, not the save.
             try:
                 snapshot.on_committed(records)
             except Exception as e:  # pragma: no cover - defensive
@@ -260,7 +340,8 @@ class CheckpointStore:
                               new_bytes=new_bytes,
                               d2h_bytes=snapshot.d2h_bytes or snapshot.nbytes,
                               d2h_bytes_skipped=snapshot.d2h_skipped,
-                              save_stall_ms=snapshot.stall_s * 1e3)
+                              save_stall_ms=snapshot.stall_s * 1e3,
+                              spooled=parked)
         # sweep_chunks=None: walk the pool only when retention actually
         # dropped a step — a full pool scan on every commit would sit inside
         # the urgent termination path for no reclaimable garbage
@@ -283,6 +364,51 @@ class CheckpointStore:
             state, step=step, mesh_info=mesh_info,
             tracker=tracker if self.mode == "delta" else None)
         return self.save_snapshot(snap, kind=kind, extra=extra)
+
+    def spooled_steps(self) -> list[int]:
+        """Steps whose saves are parked in the outage spool (oldest first)."""
+        with self._spool_lock:
+            return [p.step for p in self._spooled_commits]
+
+    def reconcile_spooled(self) -> int:
+        """Commit outage-parked saves whose chunks can now be made durable.
+
+        Probes the backend first (a cheap HEAD; also clears outage mode on
+        success), then drains the spool FIFO: re-upload each parked save's
+        refs synchronously (``upload_now``) and run the normal replace+mark
+        commit — manifest commit strictly after every ref is durable. Stops
+        at the first save the store still refuses, so a half-recovered
+        outage commits a prefix of the backlog in step order. Returns the
+        number of checkpoints committed."""
+        with self._spool_lock:
+            pending = list(self._spooled_commits)
+        if not pending:
+            return 0
+        pool = self.pool
+        probe = getattr(pool, "probe", None)
+        if probe is not None and not probe():
+            return 0
+        upload_now = getattr(pool, "upload_now", None)
+        committed = 0
+        for parked in pending:
+            if upload_now is not None and not upload_now(parked.hashes):
+                break
+            self._finish_commit(parked.stage, parked.final, parked.kind)
+            with self._spool_lock:
+                try:
+                    self._spooled_commits.remove(parked)
+                except ValueError:  # pragma: no cover - concurrent reconcile
+                    pass
+            with self._stage_lock:
+                self._inflight_stages.discard(parked.stage)
+            self._unpin_all(parked.pinned)
+            committed += 1
+            logging.getLogger("spoton").info(
+                "reconciled spooled step %d: all refs durable, manifest "
+                "committed", parked.step)
+        if committed:
+            self.gc(sweep_chunks=None)
+        return committed
 
     # -- read ----------------------------------------------------------------
 

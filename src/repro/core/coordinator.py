@@ -53,6 +53,7 @@ from collections import deque
 from dataclasses import dataclass, field
 from typing import Any, Callable
 
+from ..checkpoint import backend as chunk_backend
 from ..checkpoint import codec_sched
 from ..checkpoint.async_ckpt import AsyncCheckpointer
 from ..checkpoint.sharded import Snapshot, extract_snapshot, prestage
@@ -162,6 +163,13 @@ class CoordinatorStats:
     io_retries: int = 0
     faults_injected: int = 0
     saves_degraded: int = 0
+    # object-store backend robustness (process-wide deltas, like io_retries):
+    # bounded-retry attempts burned on backend.get/put/head ops, outage
+    # windows the consecutive-failure detector entered, and bytes spooled to
+    # the local cache while the store was unreachable (reconciled later)
+    backend_retries: int = 0
+    backend_outages: int = 0
+    spooled_bytes: int = 0
     # consecutive-failure count of the metadata poll at its worst — how
     # close the coordinator came to assuming eviction blind
     poll_failures: int = 0
@@ -225,6 +233,7 @@ class SpotOnCoordinator:
         # process-wide counters
         self._seen_io_retries = retry.snapshot_stats()["io_retries"]
         self._seen_faults = fault_inject.snapshot_stats()["faults_injected"]
+        self._seen_backend = chunk_backend.snapshot_stats()
         # storage degradation: while set, periodic saves skip-and-alert
         # until the cooldown passes (urgent saves ignore it — the notice
         # window is always worth attempting). Capped so fleet members,
@@ -315,11 +324,24 @@ class SpotOnCoordinator:
             self._seen_faults = injected
             self.stats.faults_injected += delta
             self.ledger.count("faults_injected", delta)
+        bstats = chunk_backend.snapshot_stats()
+        for key in ("backend_retries", "backend_outages", "spooled_bytes"):
+            delta = bstats[key] - self._seen_backend[key]
+            if delta > 0:
+                self._seen_backend[key] = bstats[key]
+                setattr(self.stats, key, getattr(self.stats, key) + delta)
+                self.ledger.count(key, delta)
         if self._async is None:
             return
         for info in self._async.drain_completed():
             if info.kind != "termination":
                 self.stats.ckpt_bytes_written += info.new_bytes
+            if getattr(info, "spooled", False):
+                # the save is parked in the outage spool, not committed:
+                # enter the same skip-and-alert window a storage fault does
+                # (reconcile commits the backlog once the store returns)
+                self._mark_degraded(RuntimeError(
+                    "object store outage: save spooled locally"))
 
     def _mark_degraded(self, e: BaseException) -> None:
         self.stats.saves_degraded += 1
@@ -363,6 +385,9 @@ class SpotOnCoordinator:
                 info = self.store.save_snapshot(snap, kind="transparent",
                                                 extra=self._tags())
                 self.stats.ckpt_bytes_written += info.new_bytes
+                if info.spooled:
+                    self._mark_degraded(RuntimeError(
+                        "object store outage: save spooled locally"))
         except (RuntimeError, OSError) as e:
             # a failed periodic save must not kill training: the committed
             # history is untouched (atomic commit) and the next cadence

@@ -320,6 +320,13 @@ class FleetCoordinator:
                                    for m in self.members),
             "saves_degraded": sum(m.coordinator.stats.saves_degraded
                                   for m in self.members),
+            # object-store backend robustness (zeros on a plain POSIX store)
+            "backend_retries": sum(m.coordinator.stats.backend_retries
+                                   for m in self.members),
+            "backend_outages": sum(m.coordinator.stats.backend_outages
+                                   for m in self.members),
+            "spooled_bytes": sum(m.coordinator.stats.spooled_bytes
+                                 for m in self.members),
             # physical bytes pushed to the shared volume: under a delta-mode
             # store this is dirty chunks only, far below N_saves x state size
             "bytes_written": sum(m.coordinator.stats.ckpt_bytes_written

@@ -7,12 +7,13 @@ every enumerated commit point — and the tests assert the recovery
 invariant actually holds. See README "Fault injection & torture testing".
 """
 
-from .inject import (active, fault_point, install, snapshot_stats, uninstall,
-                     write_bytes)
-from .plan import (COMMIT_CRASH_POINTS, FaultPlan, FaultRule, Injection,
-                   SimulatedCrash)
+from .inject import (active, fault_point, install, response_bytes,
+                     send_bytes, snapshot_stats, uninstall, write_bytes)
+from .plan import (BACKEND_CRASH_POINTS, COMMIT_CRASH_POINTS, FaultPlan,
+                   FaultRule, Injection, SimulatedCrash)
 
 __all__ = [
+    "BACKEND_CRASH_POINTS",
     "COMMIT_CRASH_POINTS",
     "FaultPlan",
     "FaultRule",
@@ -21,6 +22,8 @@ __all__ = [
     "active",
     "fault_point",
     "install",
+    "response_bytes",
+    "send_bytes",
     "snapshot_stats",
     "uninstall",
     "write_bytes",

@@ -16,7 +16,7 @@ from __future__ import annotations
 import os
 import threading
 from contextlib import contextmanager
-from typing import IO, Any, Dict, Iterator, Optional, Tuple
+from typing import IO, Any, Callable, Dict, Iterator, Optional, Tuple, Union
 
 from .plan import FaultPlan, Injection, SimulatedCrash
 
@@ -24,6 +24,8 @@ __all__ = [
     "active",
     "fault_point",
     "install",
+    "response_bytes",
+    "send_bytes",
     "snapshot_stats",
     "uninstall",
     "write_bytes",
@@ -74,13 +76,18 @@ def _raise_for(inj: Injection) -> None:
 
 
 def fault_point(op: str, path: str = "",
-                rollback: Optional[Tuple[str, str]] = None) -> None:
+                rollback: Union[Tuple[str, str],
+                                Callable[[], None], None] = None) -> None:
     """Consult the installed plan at one IO site.
 
     ``rollback=(dst, back)`` marks a point immediately *after* an
     ``os.replace`` whose durability is not yet guaranteed: a ``rollback``
     rule undoes the rename (``dst`` -> ``back``) before crashing, modelling
-    power loss before the directory entry hit the platter.
+    power loss before the directory entry hit the platter. A zero-arg
+    callable serves the same role for non-rename commits — e.g. the
+    object-store analogue un-commits the just-completed blob — and runs
+    before the crash is raised (OSError from the undo is swallowed, like a
+    lost disk would swallow it).
     """
     plan = _plan
     if plan is None:
@@ -90,7 +97,12 @@ def fault_point(op: str, path: str = "",
         return
     if inj.action == "rollback":
         _count_injection()
-        if rollback is not None:
+        if callable(rollback):
+            try:
+                rollback()
+            except OSError:
+                pass
+        elif rollback is not None:
             dst, back = rollback
             try:
                 # deliberately UN-does a commit-protocol rename (crash
@@ -125,3 +137,52 @@ def write_bytes(f: IO[Any], data: Any, *, op: str, path: str = "") -> None:
         raise SimulatedCrash(f"injected torn write at {op} "
                              f"({cut}/{len(data)} bytes, {inj.path or '?'})")
     _raise_for(inj)
+
+
+def send_bytes(send: Callable[[Any], None], data: Any, *,
+               op: str, path: str = "") -> None:
+    """``send(data)`` with torn-*request* capability for network writers.
+
+    A ``torn`` rule delivers only a prefix to ``send`` — the bytes that
+    made it onto the wire before the sender died — then crashes. Unlike
+    :func:`write_bytes` there is no file to flush: whatever the receiver
+    committed from the prefix is the debris (e.g. a truncated blob under a
+    final object key) that idempotent, size-verified re-upload must repair.
+    """
+    plan = _plan
+    if plan is None:
+        send(data)
+        return
+    inj = plan.check(op, path)
+    if inj is None:
+        send(data)
+        return
+    if inj.action == "torn":
+        _count_injection()
+        cut = max(0, min(len(data), int(len(data) * inj.torn_frac)))
+        send(data[:cut])
+        raise SimulatedCrash(f"injected torn send at {op} "
+                             f"({cut}/{len(data)} bytes, {inj.path or '?'})")
+    _raise_for(inj)
+
+
+def response_bytes(data: bytes, *, op: str, path: str = "") -> bytes:
+    """Filter a network *response* payload through the plan.
+
+    A ``torn`` rule returns only a prefix — a connection that died
+    mid-body, which the caller's content-address verification must catch
+    and turn into a retry (no crash is raised: the *reader* survives a torn
+    response, unlike a torn writer). Errno/crash/rollback rules raise.
+    """
+    plan = _plan
+    if plan is None:
+        return data
+    inj = plan.check(op, path)
+    if inj is None:
+        return data
+    if inj.action == "torn":
+        _count_injection()
+        cut = max(0, min(len(data), int(len(data) * inj.torn_frac)))
+        return data[:cut]
+    _raise_for(inj)
+    return data  # unreachable: _raise_for always raises

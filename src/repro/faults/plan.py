@@ -28,12 +28,23 @@ op                      site
 ``store.replace``       before the stage -> final directory rename
 ``store.replaced``      after that rename (rollback-capable)
 ``commit.<phase>``      ``store.save_snapshot`` phase boundaries: ``staged``,
-                        ``shards_written``, ``manifest_written``, ``renamed``,
-                        ``committed``
+                        ``shards_written``, ``manifest_written``,
+                        ``uploads_flushed``, ``renamed``, ``committed``
 ``provider.poll``       cloud metadata poll in the coordinator
 ``peer.send``           peer chunk server GET send (``crash`` = the serving
                         member dies mid-transfer: half the payload, then EOF)
 ``peer.fetch``          peer chunk client fetch attempt (errno = unreachable)
+``backend.head``        object-store HEAD (errno = endpoint unreachable)
+``backend.get``         object-store ranged GET response (``torn`` = the
+                        connection died mid-body: a prefix is returned and
+                        the content-address check must reject it)
+``backend.put``         object-store PUT / multipart part upload (``torn`` =
+                        a truncated blob lands under the final key before
+                        the sender dies — re-PUT must size-verify, never
+                        trust existence)
+``backend.complete``    after multipart complete (errno = lost ack, the
+                        object IS committed; ``rollback`` = un-commit the
+                        blob then crash, the rename-rollback analogue)
 ======================  ======================================================
 
 Rules match ops by ``fnmatch`` pattern, so ``chunk.*`` targets the whole
@@ -50,6 +61,7 @@ from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
 __all__ = [
+    "BACKEND_CRASH_POINTS",
     "COMMIT_CRASH_POINTS",
     "FaultPlan",
     "FaultRule",
@@ -97,12 +109,31 @@ COMMIT_CRASH_POINTS: Tuple[Tuple[str, str], ...] = (
     ("manifest.replace", "crash"),
     ("manifest.replaced", "rollback"),
     ("commit.manifest_written", "crash"),
+    ("commit.uploads_flushed", "crash"),
     ("store.replace", "crash"),
     ("store.replaced", "rollback"),
     ("commit.renamed", "crash"),
     ("marker.write", "torn"),
     ("marker.write", "crash"),
     ("commit.committed", "crash"),
+)
+
+#: Crash/fault points covering the object-store upload and commit path,
+#: exercised by ``tests/test_backend.py`` with an object-store-backed pool.
+#: Same invariant as :data:`COMMIT_CRASH_POINTS`: abort (or errno) a save at
+#: each point and ``latest_valid()`` stays a bit-identical committed
+#: checkpoint — persistent errnos don't fail the save at all, they spool it
+#: locally and reconcile when the store returns.
+BACKEND_CRASH_POINTS: Tuple[Tuple[str, str], ...] = (
+    ("backend.head", "etimedout"),
+    ("backend.get", "eio"),
+    ("backend.get", "torn"),
+    ("backend.put", "eio"),
+    ("backend.put", "torn"),
+    ("backend.put", "crash"),
+    ("backend.complete", "eio"),
+    ("backend.complete", "rollback"),
+    ("backend.complete", "crash"),
 )
 
 

@@ -291,6 +291,9 @@ class SpotTrainer:
                 "io_retries": st.io_retries,
                 "faults_injected": st.faults_injected,
                 "saves_degraded": st.saves_degraded,
+                "backend_retries": st.backend_retries,
+                "backend_outages": st.backend_outages,
+                "spooled_bytes": st.spooled_bytes,
                 "poll_failures": st.poll_failures,
                 "mttr_mean_s": st.mttr_mean_s,
                 "mttr_samples": list(st.mttr_samples),

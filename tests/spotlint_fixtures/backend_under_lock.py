@@ -1,0 +1,58 @@
+"""SPOT031 seeded fixture addendum: ChunkBackend client calls under a lock.
+
+Violations: object-store network methods (``head``/``put``/``get_range``/
+``complete_multipart``) while holding a tracker lock — each may burn a
+full bounded-retry cycle against a flaky endpoint, serializing every
+writer behind it. The ``get_range`` case also draws SPOT041 (it is a bare
+one-shot GET on top of being under the lock): one defect, two distinct
+failure modes. Clean twin: decide under the lock, ride the network
+outside it, re-acquire to record — the shape BackendChunkPool uses.
+Never imported; the rule is lexical (see README in this directory).
+"""
+
+import threading
+
+
+class UploadTracker:
+    def __init__(self, backend):
+        self._lock = threading.Lock()
+        self.backend = backend
+        self.durable = {}
+
+    def confirm_holding_lock(self, key):
+        # a flaky endpoint's full retry cycle now serializes every writer
+        with self._lock:
+            size = self.backend.head(key)  # SPOTLINT-EXPECT: SPOT031
+            self.durable[key] = size
+        return size
+
+    def upload_holding_lock(self, key, data):
+        with self._lock:
+            if key not in self.durable:
+                self.backend.put(key, data)  # SPOTLINT-EXPECT: SPOT031
+                self.durable[key] = len(data)
+
+    def finish_holding_lock(self, key, upload_id, etags):
+        with self._lock:
+            self.backend.complete_multipart(key, upload_id, etags)  # SPOTLINT-EXPECT: SPOT031
+
+    def read_holding_lock(self, key, nbytes):
+        # under the lock AND a bare one-shot GET: both rules fire
+        with self._lock:
+            return self.backend.get_range(key, 0, nbytes)  # SPOTLINT-EXPECT: SPOT031, SPOT041
+
+    def snapshot_then_upload_twin(self, key, data):
+        # clean: decide under the lock, upload outside it, record after
+        with self._lock:
+            if key in self.durable:
+                return 0
+        self.backend.put(key, data)
+        with self._lock:
+            self.durable[key] = len(data)
+        return len(data)
+
+    def bookkeeping_twin(self, key, size):
+        # clean: pure in-memory accounting is what the lock is for
+        with self._lock:
+            self.durable[key] = size
+            return len(self.durable)

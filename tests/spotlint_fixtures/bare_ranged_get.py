@@ -1,0 +1,55 @@
+"""SPOT041 seeded fixture: unguarded object-store ranged GETs, plus twins.
+
+Violations: a ``get_range`` call outside the bounded-retry substrate (a
+torn response wedges the restore — the content address makes the fetch
+repeatable, but only if somebody repeats it), and a retried fetch whose
+closure never re-digests the payload (a corrupt response is accepted on
+attempt 1; the retries protect nothing). Clean twins: the verified-and-
+retried shape ``backend.fetch_chunk_verified`` uses, and a backend
+implementation delegating to its transport (the interface seam the retry
+contract sits above). Never imported; the rule is lexical (see README in
+this directory).
+"""
+
+from repro.checkpoint.chunkstore import chunk_content_ok
+from repro.core.retry import IO_RETRY, call_with_retry
+
+
+def fetch_once_bare(backend, key, nbytes):
+    # one torn response and this restore path is wedged for good
+    return backend.get_range(key, 0, nbytes)  # SPOTLINT-EXPECT: SPOT041
+
+
+def fetch_retried_unverified(backend, key, nbytes):
+    # bounded attempts, but nothing re-digests the payload — a corrupt
+    # response is accepted on the first try and no retry ever triggers
+    return call_with_retry(
+        lambda: backend.get_range(key, 0, nbytes),  # SPOTLINT-EXPECT: SPOT041
+        policy=IO_RETRY)
+
+
+def _fetch_verified_once(backend, ref):
+    data = backend.get_range("chunks/%s/%s" % (ref.hash[:2], ref.hash),
+                             0, ref.nbytes)
+    if not chunk_content_ok(ref, data):
+        raise OSError(5, "content-address mismatch: " + ref.hash)
+    return data
+
+
+def fetch_verified_twin(backend, ref):
+    # clean: the retried closure re-digests against the content address
+    # before accepting a byte, so a short/torn/corrupt response becomes
+    # a transient failure the bounded retry absorbs
+    return call_with_retry(lambda: _fetch_verified_once(backend, ref),
+                           policy=IO_RETRY)
+
+
+class MirrorBackend:
+    def __init__(self, inner):
+        self.inner = inner
+
+    def get_range(self, key, start, length):
+        # clean: interface delegation — a backend implementation handing
+        # the range to its transport is the seam the retry contract sits
+        # above; the consumer owns retry and verification
+        return self.inner.get_range(key, start, length)

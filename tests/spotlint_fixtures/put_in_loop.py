@@ -1,0 +1,55 @@
+"""SPOT042 seeded fixture: blind chunk-key PUT loops, plus clean twins.
+
+Violations: an object-store ``put`` inside a for/while loop with no
+existence consult anywhere in the loop — re-driving the loop (an outage
+reconcile, a retried save) re-uploads every chunk blind instead of
+treating an already-committed address as a verified no-op. Clean twins:
+the HEAD-guarded shape ``backend.upload_chunk`` uses, a queue handoff
+(``.put`` on a non-backend receiver), and a single commit-time PUT outside
+any loop. Never imported; the rule is lexical (see README in this
+directory).
+"""
+
+
+def object_key(h):
+    return "chunks/%s/%s" % (h[:2], h)
+
+
+def upload_all_blind(backend, chunks):
+    # re-driving this loop after a partial failure re-sends every byte
+    for h, data in chunks:
+        backend.put(object_key(h), data)  # SPOTLINT-EXPECT: SPOT042
+
+
+def drain_spool_blind(objstore, spool):
+    # the outage-reconcile path of all places must be idempotent: it runs
+    # precisely when the previous attempt died partway through
+    while spool:
+        h, data = spool.pop()
+        objstore.put(object_key(h), data)  # SPOTLINT-EXPECT: SPOT042
+
+
+def upload_all_guarded_twin(backend, chunks):
+    # clean: HEAD first — an already-committed address whose size matches
+    # is a verified no-op, and a size mismatch (torn upload) is rewritten
+    sent = 0
+    for h, data in chunks:
+        key = object_key(h)
+        if backend.head(key) == len(data):
+            continue
+        backend.put(key, data)
+        sent += len(data)
+    return sent
+
+
+def queue_dispatch_twin(work_queue, jobs):
+    # clean: a queue handoff, not an object-store upload — the receiver
+    # does not look like a backend client
+    for job in jobs:
+        work_queue.put(job)
+
+
+def single_put_twin(backend, key, data):
+    # clean: one commit-time PUT outside any loop; the caller's retry
+    # discipline owns re-drive semantics
+    backend.put(key, data)

@@ -1,0 +1,434 @@
+"""Object-store ChunkBackend: round-trip bit-identity, the backend
+crash-point matrix, idempotent uploads, outage-spool-reconcile, and the
+three-level local → peer → object-store resolution order.
+
+The in-process object store (``backend.InProcessObjectStore``) stands in
+for S3/GCS: keyed blobs, ranged GETs, multipart sessions, an outage
+switch, and the process-wide FaultPlan surface (``backend.*`` ops) — so
+the whole network failure envelope runs in CI with no credentials.
+
+``TestSeededNetworkTorture`` is the randomized storm behind the CI
+torture step; it only runs with ``SPOTON_FAULTS=1``.
+"""
+
+import hashlib
+import os
+import random
+import shutil
+
+import numpy as np
+import pytest
+
+from repro import faults
+from repro.checkpoint import CheckpointStore
+from repro.checkpoint import backend as bk
+from repro.checkpoint import peer_exchange as px
+from repro.checkpoint.chunkstore import ChunkPool, ChunkRef
+
+
+def make_state(seed: int) -> dict:
+    rng = np.random.default_rng(seed)
+    return {
+        "w": rng.standard_normal((64, 33)).astype(np.float32),
+        "m": (rng.standard_normal(4096) * 8).astype(np.int32),
+        "step": seed,
+    }
+
+
+def template(state: dict) -> dict:
+    return {k: (np.zeros_like(v) if isinstance(v, np.ndarray) else 0)
+            for k, v in state.items()}
+
+
+def assert_state_equal(got: dict, want: dict) -> None:
+    assert set(got) == set(want)
+    for k, v in want.items():
+        if isinstance(v, np.ndarray):
+            np.testing.assert_array_equal(np.asarray(got[k]), v)
+        else:
+            assert got[k] == v
+
+
+def make_backend_store(root, *, server=None, part_size=1024, **kw):
+    """Store backed by an in-process object store. The tiny part size
+    (vs chunk_size=4096) forces the multipart path on every chunk."""
+    server = server or bk.InProcessObjectStore()
+    backend = bk.ObjectStoreBackend(server)
+    kw.setdefault("chunk_size", 4096)
+    kw.setdefault("retention", 5)
+    store = CheckpointStore(str(root), backend=backend, **kw)
+    store.pool.part_size = part_size
+    return store, server
+
+
+def cache_dir(store: CheckpointStore) -> str:
+    return store.pool.root
+
+
+def tmp_debris(root) -> list:
+    return [d for d in os.listdir(root) if ".tmp-" in d]
+
+
+# -- the in-process server itself ---------------------------------------------
+
+
+class TestObjectStoreServer:
+    def test_put_head_ranged_get(self):
+        s = bk.InProcessObjectStore()
+        s.put("chunks/ab/abcd", b"0123456789")
+        assert s.head("chunks/ab/abcd") == 10
+        assert s.head("chunks/ab/missing") is None
+        assert s.get_range("chunks/ab/abcd", 3, 4) == b"3456"
+        with pytest.raises(OSError):
+            s.get_range("chunks/ab/missing", 0, 4)
+
+    def test_multipart_assembles_in_part_order(self):
+        s = bk.InProcessObjectStore()
+        uid = s.create_multipart("k")
+        s.upload_part("k", uid, 1, b"bbb")
+        s.upload_part("k", uid, 0, b"aaa")
+        s.complete_multipart("k", uid)
+        assert s.get_range("k", 0, 6) == b"aaabbb"
+
+    def test_outage_raises_etimedout(self):
+        s = bk.InProcessObjectStore()
+        s.put("k", b"x")
+        s.set_outage(True)
+        with pytest.raises(OSError):
+            s.head("k")
+        s.set_outage(False)
+        assert s.head("k") == 1
+
+
+# -- round-trip bit-identity ---------------------------------------------------
+
+
+class TestRoundTrip:
+    @pytest.mark.parametrize("mode", ["delta", "full"])
+    def test_serial_and_streaming_bit_identical(self, tmp_path, mode):
+        store, server = make_backend_store(tmp_path, mode=mode)
+        s1, s2 = make_state(1), make_state(2)
+        store.save(1, s1)
+        store.save(2, s2)
+        got, man = store.restore(template(s2))
+        assert man.step == 2
+        assert_state_equal(got, s2)
+        got_s, _ = store.restore(template(s2), streaming=True)
+        assert_state_equal(got_s, s2)
+        got1, man1 = store.restore(template(s1), step=1)
+        assert man1.step == 1
+        assert_state_equal(got1, s1)
+        if mode == "delta":
+            # chunk payloads really crossed the modeled link, multipart
+            assert server.stats["puts"] > 0
+            assert server.stats["parts"] > 0
+
+    def test_cold_restore_from_backend_only(self, tmp_path):
+        store, server = make_backend_store(tmp_path)
+        s1 = make_state(7)
+        store.save(1, s1)
+        # replacement instance: manifests on the shared mount survive, the
+        # local chunk cache does not
+        shutil.rmtree(cache_dir(store))
+        fresh, _ = make_backend_store(tmp_path, server=server)
+        got, man = fresh.restore(template(s1))
+        assert man.step == 1
+        assert_state_equal(got, s1)
+        assert fresh.pool.stats["backend_reads"] > 0
+        # the read-through landed every chunk in the cache: the second
+        # (streaming) restore is pure local mmap
+        before = server.stats["gets"]
+        got_s, _ = fresh.restore(template(s1), streaming=True)
+        assert_state_equal(got_s, s1)
+        assert fresh.pool.stats["cache_hits"] > 0
+        assert server.stats["gets"] == before
+
+    def test_per_shard_region_reads_verified(self, tmp_path):
+        store, server = make_backend_store(tmp_path)
+        s1 = make_state(9)
+        store.save(1, s1)
+        shutil.rmtree(cache_dir(store))
+        fresh, _ = make_backend_store(tmp_path, server=server)
+        man, reader = fresh.latest_valid()
+        try:
+            # region decode resolves chunks through the same chunk_path
+            # hook, so a cold cache faults in only what the region needs
+            got = reader.read_region_for_restore("w", ((0, 16), (0, 33)))
+            np.testing.assert_array_equal(got, s1["w"][:16, :33])
+        finally:
+            reader.close()
+
+
+# -- idempotent uploads --------------------------------------------------------
+
+
+class TestIdempotentUpload:
+    def test_reput_of_committed_address_is_noop(self):
+        server = bk.InProcessObjectStore()
+        backend = bk.ObjectStoreBackend(server)
+        data = np.random.default_rng(3).bytes(5000)
+        h = hashlib.sha1(data).hexdigest()
+        key = bk.object_key(h)
+        sent1 = bk.upload_chunk(backend, h, data, part_size=2048)
+        assert sent1 == len(data)
+        gen = server.put_generations[key]
+        # the re-PUT is a verified no-op: zero bytes, zero new generations
+        sent2 = bk.upload_chunk(backend, h, data, part_size=2048)
+        assert sent2 == 0
+        assert server.put_generations[key] == gen
+
+    def test_torn_upload_debris_rewritten_never_appended(self):
+        server = bk.InProcessObjectStore()
+        backend = bk.ObjectStoreBackend(server)
+        data = np.random.default_rng(4).bytes(3000)
+        h = hashlib.sha1(data).hexdigest()
+        key = bk.object_key(h)
+        server.put(key, data[:100])         # torn-upload debris at the key
+        sent = bk.upload_chunk(backend, h, data, part_size=1 << 20)
+        assert sent == len(data)            # size mismatch => rewritten whole
+        assert server.head(key) == len(data)
+        assert backend.get_range(key, 0, len(data)) == data
+
+
+# -- the backend crash-point matrix --------------------------------------------
+
+#: points whose effect is a killed writer (SimulatedCrash out of the save);
+#: persistent errno points exhaust the bounded retry and must DEGRADE (the
+#: save parks, spooled, instead of failing); ABSORBED points commit anyway —
+#: an errno after complete_multipart is a lost ack, and the retrying
+#: uploader's HEAD discovers the object already committed
+CRASH_CLASS = {
+    ("backend.put", "torn"),
+    ("backend.put", "crash"),
+    ("backend.complete", "rollback"),
+    ("backend.complete", "crash"),
+}
+ABSORBED = {("backend.complete", "eio")}
+
+
+class TestBackendCrashMatrix:
+    @pytest.mark.parametrize(
+        "op,error", faults.BACKEND_CRASH_POINTS,
+        ids=[f"{op}-{error}" for op, error in faults.BACKEND_CRASH_POINTS])
+    def test_abort_degrade_recover(self, tmp_path, op, error):
+        store, server = make_backend_store(tmp_path)
+        s1, s2, s3 = make_state(1), make_state(2), make_state(3)
+        store.save(1, s1)
+
+        if op == "backend.get":
+            self._get_case(tmp_path, store, server, s1, error)
+            return
+
+        count = 1 if (op, error) in CRASH_CLASS else -1
+        plan = faults.FaultPlan().add(op, error=error, count=count)
+        if (op, error) in CRASH_CLASS:
+            with faults.active(plan):
+                with pytest.raises(faults.SimulatedCrash):
+                    store.save(2, s2)
+        elif (op, error) in ABSORBED:
+            before = bk.snapshot_stats()["backend_retries"]
+            with faults.active(plan):
+                info = store.save(2, s2)
+            assert not info.spooled
+            assert plan.fired() >= 1
+            assert bk.snapshot_stats()["backend_retries"] > before
+            assert store.committed_steps() == [1, 2]
+            got2, man2 = store.restore(template(s2))
+            assert man2.step == 2
+            assert_state_equal(got2, s2)
+            return
+        else:
+            with faults.active(plan):
+                info = store.save(2, s2)
+            # persistent network errno: bounded retries exhaust, the save
+            # spools locally and parks — degradation, not failure
+            assert info.spooled
+            assert store.spooled_steps() == [2]
+            assert store.pool.spooled_bytes() > 0
+        assert plan.fired() >= 1, f"crash point {op}/{error} never hit"
+
+        # a fresh store (the restarted process) finds the prior checkpoint
+        # bit-identical — a parked or killed save is never half-visible
+        reopened, _ = make_backend_store(tmp_path, server=server)
+        assert reopened.committed_steps() == [1]
+        got, man = reopened.restore(template(s1))
+        assert man.step == 1
+        assert_state_equal(got, s1)
+
+        # faults cleared: the parked commit reconciles, the killed writer's
+        # successor commits over the debris
+        if (op, error) not in CRASH_CLASS:
+            assert store.reconcile_spooled() == 1
+            assert store.committed_steps() == [1, 2]
+            got2, man2 = store.restore(template(s2))
+            assert man2.step == 2
+            assert_state_equal(got2, s2)
+        store.save(3, s3)
+        got3, man3 = store.restore(template(s3))
+        assert man3.step == 3
+        assert_state_equal(got3, s3)
+        assert tmp_debris(tmp_path) == []
+
+    def _get_case(self, tmp_path, store, server, s1, error):
+        # GET faults strike the restore path: transient torn/errno responses
+        # are absorbed by the content-address-keyed bounded retry, and a
+        # truncated payload is never accepted (it fails the digest)
+        shutil.rmtree(cache_dir(store))
+        fresh, _ = make_backend_store(tmp_path, server=server)
+        before = bk.snapshot_stats()["backend_retries"]
+        plan = faults.FaultPlan().add("backend.get", error=error, count=2)
+        with faults.active(plan):
+            got, man = fresh.restore(template(s1))
+        assert plan.fired() >= 1
+        assert man.step == 1
+        assert_state_equal(got, s1)
+        assert bk.snapshot_stats()["backend_retries"] > before
+
+
+# -- outage: spool, park, reconcile, fresh-process restore ---------------------
+
+
+class TestOutageSpoolReconcile:
+    def test_end_to_end(self, tmp_path):
+        store, server = make_backend_store(tmp_path)
+        s1, s2, s3 = make_state(11), make_state(12), make_state(13)
+        stats0 = bk.snapshot_stats()
+        store.save(1, s1)
+
+        server.set_outage(True)
+        info2 = store.save(2, s2)
+        info3 = store.save(3, s3)
+        assert info2.spooled and info3.spooled
+        assert store.spooled_steps() == [2, 3]
+        assert store.committed_steps() == [1]
+        stats1 = bk.snapshot_stats()
+        assert stats1["backend_outages"] > stats0["backend_outages"]
+        assert stats1["spooled_bytes"] > stats0["spooled_bytes"]
+        # readers degrade, never corrupt: latest valid is the durable step
+        got, man = store.restore(template(s1))
+        assert man.step == 1
+        assert_state_equal(got, s1)
+
+        server.set_outage(False)
+        assert store.reconcile_spooled() == 2
+        assert store.committed_steps() == [1, 2, 3]
+        assert store.spooled_steps() == []
+        assert store.pool.spooled_bytes() == 0
+
+        # fresh process on a replacement instance, cold cache: the
+        # reconciled steps restore bit-identically from the backend alone
+        shutil.rmtree(cache_dir(store))
+        fresh, _ = make_backend_store(tmp_path, server=server)
+        got3, man3 = fresh.restore(template(s3))
+        assert man3.step == 3
+        assert_state_equal(got3, s3)
+        got2, man2 = fresh.restore(template(s2), step=2)
+        assert man2.step == 2
+        assert_state_equal(got2, s2)
+
+    def test_next_save_drains_backlog_first(self, tmp_path):
+        store, server = make_backend_store(tmp_path)
+        s1, s2 = make_state(21), make_state(22)
+        server.set_outage(True)
+        assert store.save(1, s1).spooled
+        server.set_outage(False)
+        # the next save reconciles parked steps before landing its own, so
+        # commit order stays monotone in step order
+        info2 = store.save(2, s2)
+        assert not info2.spooled
+        assert store.committed_steps() == [1, 2]
+
+    def test_stat_keys_mirror_coordinator_fields(self):
+        from repro.core.coordinator import CoordinatorStats
+        st = CoordinatorStats()
+        for key in bk.snapshot_stats():
+            assert hasattr(st, key), key
+
+
+# -- three-level resolution: local -> peer -> object store ---------------------
+
+
+class TestThreeLevelResolution:
+    def test_restore_resolves_local_then_peer_then_store(self, tmp_path):
+        store, server = make_backend_store(tmp_path)
+        s1 = make_state(31)
+        store.save(1, s1)
+
+        # seed a surviving peer with roughly half the chunks, then wipe
+        # this member's cache: restore must stitch peer + object store
+        chunks = sorted(store.pool.all_chunks())
+        peer = ChunkPool(str(tmp_path / "peer" / "chunks"))
+        for h, path in chunks[: len(chunks) // 2]:
+            with open(path, "rb") as f:
+                peer.write(h, f.read(), sync_dir=False)
+        shutil.rmtree(cache_dir(store))
+
+        fresh, _ = make_backend_store(tmp_path, server=server)
+        local = ChunkPool(str(tmp_path / "local" / "chunks"))
+        srv = px.PeerChunkServer(peer).start()
+        try:
+            rt = px.ReadThroughPool(local, px.PeerChunkClient([srv.address]),
+                                    fresh.pool)
+            got, man = fresh.restore(template(s1), chunk_pool=rt)
+            assert man.step == 1
+            assert_state_equal(got, s1)
+            assert rt.stats["peer_hits"] > 0
+            assert rt.stats["store_reads"] > 0
+            assert fresh.pool.stats["backend_reads"] > 0
+            # second pass: peer hits are cached in `local`, store reads in
+            # the backend pool's cache — the object store is not consulted
+            gets = server.stats["gets"]
+            got2, _ = fresh.restore(template(s1), chunk_pool=rt)
+            assert_state_equal(got2, s1)
+            assert rt.stats["local_hits"] > 0
+            assert server.stats["gets"] == gets
+        finally:
+            srv.close()
+
+
+# -- randomized seeded torture (CI: SPOTON_FAULTS=1) ---------------------------
+
+
+@pytest.mark.skipif(
+    not os.environ.get("SPOTON_FAULTS"),
+    reason="seeded network torture: set SPOTON_FAULTS=1 (CI torture step)")
+class TestSeededNetworkTorture:
+    """Per seed: four saves under a random transient-fault plan (count<=2,
+    so attempts=3 absorbs any single op's streak), a mid-storm restore, a
+    reconcile, and a cold-cache bit-identity sweep over every step. The
+    invariant is the paper's: a save either commits or parks; committed
+    state is always bit-identical; nothing is ever half-visible."""
+
+    @pytest.mark.parametrize("seed", range(20))
+    def test_storm(self, tmp_path, seed):
+        rng = random.Random(0xB0 + seed)
+        store, server = make_backend_store(tmp_path)
+        states = {}
+        for step in range(1, 5):
+            states[step] = make_state(100 * seed + step)
+            plan = faults.FaultPlan()
+            for op in ("backend.head", "backend.get",
+                       "backend.put", "backend.complete"):
+                if rng.random() < 0.6:
+                    plan.add(op, nth=rng.randint(1, 3),
+                             count=rng.randint(1, 2),
+                             error=rng.choice(["eio", "etimedout"]))
+            with faults.active(plan):
+                info = store.save(step, states[step])
+                committed = store.committed_steps()
+                assert committed == sorted(committed)
+                if committed:
+                    latest = committed[-1]
+                    got, man = store.restore(template(states[latest]))
+                    assert man.step == latest
+                    assert_state_equal(got, states[latest])
+            assert info.spooled or step in store.committed_steps()
+
+        store.reconcile_spooled()
+        assert store.committed_steps() == [1, 2, 3, 4]
+        shutil.rmtree(cache_dir(store))
+        fresh, _ = make_backend_store(tmp_path, server=server)
+        for step, want in states.items():
+            got, man = fresh.restore(template(want), step=step)
+            assert man.step == step
+            assert_state_equal(got, want)

@@ -38,6 +38,9 @@ FIXTURE_FILES = [
     "abba_locks.py",
     "unbounded_retry.py",
     "peer_under_lock.py",
+    "bare_ranged_get.py",
+    "put_in_loop.py",
+    "backend_under_lock.py",
 ]
 
 
